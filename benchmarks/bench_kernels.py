@@ -1,0 +1,48 @@
+"""Kernel micro-benchmarks: fused sparsify_ef vs 3-pass jnp reference, and
+flash-decode vs naive decode attention (CPU wall times are indicative; the
+HBM-traffic argument is in the kernel docstrings; TPU is the target)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.kernels.ref import decode_attn_ref, sparsify_ef_ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, 6_568_650), jnp.float32)  # ResNet-9 size
+    t = jnp.float32(0.5)
+    ref_us = _time(jax.jit(sparsify_ef_ref), x, t)
+    rows.append(csv_row("sparsify_ef_ref_6.5M", ref_us, "impl=jnp_3pass"))
+
+    q = jnp.asarray(rng.normal(0, 1, (4, 8, 128)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(0, 1, (4, 8192, 2, 128)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(0, 1, (4, 8192, 2, 128)), jnp.bfloat16)
+    us = _time(jax.jit(lambda *a: decode_attn_ref(*a, 8192)), q, k, v)
+    rows.append(csv_row("decode_attn_ref_8k", us, "impl=jnp"))
+
+    from repro.models.mamba2 import ssd_chunked
+    from repro.kernels.ref import ssd_scan_ref
+
+    xx = jnp.asarray(rng.normal(0, 1, (2, 512, 8, 64)), jnp.float32)
+    a = jnp.asarray(-np.abs(rng.normal(0, 0.5, (2, 512, 8))), jnp.float32)
+    bb = jnp.asarray(rng.normal(0, 1, (2, 512, 64)), jnp.float32)
+    cc = jnp.asarray(rng.normal(0, 1, (2, 512, 64)), jnp.float32)
+    us_chunk = _time(jax.jit(lambda *args: ssd_chunked(*args, 128)), xx, a, bb, cc)
+    us_seq = _time(jax.jit(ssd_scan_ref), xx, a, bb, cc)
+    rows.append(csv_row("ssd_chunked_512", us_chunk, f"seq_ref_us={us_seq:.0f}"))
+    return rows

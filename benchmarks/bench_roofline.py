@@ -1,0 +1,60 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads the JSONL records produced by ``python -m repro.launch.dryrun`` and
+emits one CSV row per (arch, shape, mesh) with the three terms and the
+bottleneck.  Prefers the post-§Perf ``dryrun_final.jsonl`` (both meshes in
+one file); falls back to the original baseline files.  If nothing exists
+(fresh checkout) it reports that the sweep must be run first rather than
+failing the bench harness.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import csv_row
+
+
+def _load():
+    recs = []
+    if os.path.exists("dryrun_final.jsonl"):
+        recs += [json.loads(l) for l in open("dryrun_final.jsonl")]
+    else:
+        for f in ("dryrun_baseline.jsonl", "dryrun_multipod.jsonl"):
+            if os.path.exists(f):
+                recs += [json.loads(l) for l in open(f)]
+    if os.path.exists("dryrun_perf.jsonl"):
+        recs += [json.loads(l) for l in open("dryrun_perf.jsonl")]
+    return recs
+
+
+def run():
+    recs = _load()
+    if not recs:
+        return [csv_row("roofline", 0.0, "missing: run repro.launch.dryrun --all")]
+    best = {}
+    for r in recs:
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        key = (mesh, r["arch"], r["shape"], r.get("tag", "baseline"))
+        best[key] = r
+    rows = []
+    for (mesh, arch, shape, tag), r in sorted(best.items()):
+        name = f"roofline_{mesh}_{arch}_{shape}"
+        if tag not in ("baseline", "final"):
+            name += f"_{tag}"
+        if r["status"] == "skipped":
+            rows.append(csv_row(name, 0.0, "skipped"))
+            continue
+        if r["status"] != "ok":
+            rows.append(csv_row(name, 0.0, f"error={r.get('error', '?')[:60]}"))
+            continue
+        rf = r["roofline"]
+        dominant = max(rf["t_compute"], rf["t_memory"], rf["t_collective"])
+        rows.append(csv_row(
+            name,
+            r.get("compile_s", 0.0) * 1e6,
+            f"tc={rf['t_compute']:.3e};tm={rf['t_memory']:.3e};"
+            f"tx={rf['t_collective']:.3e};bound={rf['bottleneck']};"
+            f"useful={rf['useful_ratio']:.2f};step_s={dominant:.3e}",
+        ))
+    return rows

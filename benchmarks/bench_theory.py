@@ -1,0 +1,75 @@
+"""Theory validation: Lemma 2/3 Monte-Carlo vs closed forms, Corollary 1
+U-shape, Theorem 2 monotonicities (the paper's analytical claims)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import theory as T
+from repro.mobility.contact import ContactProcess
+
+
+def lemma2():
+    rows = []
+    for c, lam in ((4.0, 40.0), (8.0, 100.0)):
+        t0 = time.time()
+        proc = ContactProcess(8, c, lam, 10.0, seed=0)
+        zeta, _ = proc.sample_rounds(3000)
+        kappa = np.zeros(8, int)
+        sq = []
+        for r in range(1, 3001):
+            up = zeta[r - 1] == 1
+            sq.append((r - kappa)[up])
+            kappa[up] = r
+        mc = float(np.mean(np.concatenate(sq).astype(float) ** 2))
+        bound = T.staleness_second_moment(c, lam, 10.0)
+        rows.append(csv_row(
+            f"lemma2_c{c:g}_l{lam:g}", (time.time() - t0) * 1e6,
+            f"mc={mc:.2f};bound={bound:.2f};bound_plus_round={(bound**0.5+1)**2:.2f}",
+        ))
+    return rows
+
+
+def lemma3():
+    t0 = time.time()
+    s, u, rate, c = 4096, 32, 2e4, 3.0
+    rng = np.random.default_rng(0)
+    import jax.numpy as jnp
+
+    from repro.core import sparsify as SP
+
+    x = jnp.asarray(rng.normal(0, 1, s), jnp.float32)
+    errs = []
+    for _ in range(100):
+        tau = rng.exponential(c)
+        k = min(tau * rate / (u + np.log2(s)), s)
+        _, err, _ = SP.sparsify_topk(x, float(k), method="exact")
+        errs.append(float(jnp.sum(err**2)) / float(jnp.sum(x**2)))
+    literal = 1 - T.gamma(rate, c, s, u)
+    corrected = T.expected_error_fraction(rate, c, s, u)
+    return [csv_row(
+        "lemma3_error_fraction", (time.time() - t0) * 1e6,
+        f"mc={np.mean(errs):.4f};paper_literal={literal:.2e};corrected={corrected:.4f}",
+    )]
+
+
+def corollary1():
+    t0 = time.time()
+    args = dict(
+        f0_gap=1.0, big_l=1.0, sigma=1.0, g2=1.0, n=20, rounds=500,
+        rate=1e6, contact_const=200.0, intercontact_const=4000.0,
+        delta=10.0, s=100_000, gamma_mode="model",
+    )
+    grid = np.linspace(1, 120, 120)
+    vals = [T.corollary1_bound(v, **args) for v in grid]
+    vstar = float(grid[int(np.argmin(vals))])
+    return [csv_row(
+        "corollary1_ushape", (time.time() - t0) * 1e6,
+        f"vstar={vstar:.1f};b_low={vals[0]:.3f};b_min={min(vals):.3f};b_high={vals[-1]:.3f}",
+    )]
+
+
+def run():
+    return lemma2() + lemma3() + corollary1()

@@ -1,0 +1,47 @@
+"""Paper Figs. 10-11: Argoverse-style trajectory prediction (LaneGCN-lite).
+
+ADE (average displacement error) for MADS vs benchmarks, and vs speed.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, run_policy, trajectory_federation
+
+ROUNDS = 40
+
+
+def fig10_policies():
+    cfg, model, dev, ev = trajectory_federation()
+    rows = []
+    for pol in ("mads", "afl-spar", "afl", "optimal"):
+        accs, wall = [], 0.0
+        for seed in (0, 1, 2):
+            res, w = run_policy(cfg, model, dev, ev, pol, ROUNDS,
+                                learning_rate=0.1, mean_contact=2.0,
+                                energy_budget=(3.0, 6.0), seed=seed)
+            accs.append(res.final_eval)
+            wall += w
+        import numpy as _np
+        res_ade = _np.mean(accs)
+        rows.append(csv_row(
+            f"fig10_{pol}", wall / (3 * ROUNDS) * 1e6,
+            f"ade={res_ade:.4f}±{_np.std(accs):.3f}"
+        ))
+    return rows
+
+
+def fig11_speed():
+    cfg, model, dev, ev = trajectory_federation()
+    rows = []
+    for v in (2.0, 20.0):
+        res, wall = run_policy(
+            cfg, model, dev, ev, "mads", ROUNDS, learning_rate=0.05,
+            speed=v, contact_const=40.0, intercontact_const=300.0,
+        )
+        rows.append(csv_row(
+            f"fig11_v{v:g}_mads", wall / ROUNDS * 1e6, f"ade={res.final_eval:.4f}"
+        ))
+    return rows
+
+
+def run():
+    return fig10_policies() + fig11_speed()

@@ -1,0 +1,70 @@
+"""Shared benchmark harness: a small, fast federation (CPU-sized ResNet on
+synthetic CIFAR) mirroring the paper's §VI setup at reduced scale.
+
+Every figure-benchmark perturbs exactly one system variable (contact time,
+inter-contact time, speed, V, rho, policy) — like the paper's ablations —
+and reports time-per-round plus the figure's derived quantity.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import FLConfig, get_config
+from repro.core.runner import run_afl
+from repro.data import DeviceLoader, SyntheticCifar, SyntheticTrajectories, dirichlet_partition
+from repro.models.registry import build_model
+
+BASE_FL = dict(
+    num_devices=8,
+    rounds=40,
+    batch_size=16,
+    learning_rate=0.02,
+    mean_contact=6.0,
+    mean_intercontact=30.0,
+    energy_budget=(40.0, 80.0),
+    lyapunov_v=1e-4,
+)
+
+
+def cifar_federation(rho: float = 100.0, devices: int = 8, seed: int = 11,
+                     width: int = 8, train_n: int = 800):
+    cfg = get_config("resnet9-cifar10").replace(d_model=width)
+    model = build_model(cfg)
+    ds = SyntheticCifar(noise=0.3, seed=seed)
+    imgs, labels = ds.make_split(train_n, seed=seed + 1)
+    parts = dirichlet_partition(labels, devices, rho=rho, seed=seed)
+    dev = [{"images": imgs[p], "labels": labels[p]} for p in parts]
+    ev = dict(zip(("images", "labels"), ds.make_split(256, seed=seed + 2)))
+    return cfg, model, dev, ev
+
+
+def trajectory_federation(devices: int = 8, seed: int = 21, train_n: int = 800):
+    cfg = get_config("lanegcn-argoverse").replace(d_model=32, d_ff=64)
+    model = build_model(cfg)
+    ds = SyntheticTrajectories(seed=seed)
+    data = ds.make_split(train_n, seed=seed + 1)
+    order = np.random.default_rng(seed).permutation(train_n)
+    chunks = np.array_split(order, devices)
+    dev = [{k: v[c] for k, v in data.items()} for c in chunks]
+    ev = ds.make_split(256, seed=seed + 2)
+    return cfg, model, dev, ev
+
+
+def run_policy(cfg, model, dev, ev, policy: str, rounds: int, **fl_over):
+    params = dict(BASE_FL)
+    params.update(fl_over)
+    params["rounds"] = rounds
+    params["num_devices"] = len(dev)
+    fl = FLConfig(**params)
+    loader = DeviceLoader(dev, fl.batch_size, seed=fl.seed)
+    t0 = time.time()
+    res = run_afl(model, cfg, fl, policy, loader, ev, rounds=rounds,
+                  eval_every=max(rounds // 2, 1))
+    wall = time.time() - t0
+    return res, wall
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (see each bench module's docstring
+for the figure mapping).  Select subsets with
+``python -m benchmarks.run --only mobility,mads``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    ("theory", "benchmarks.bench_theory"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("mobility", "benchmarks.bench_mobility"),
+    ("mads", "benchmarks.bench_mads"),
+    ("trajectory", "benchmarks.bench_trajectory"),
+    ("ablation", "benchmarks.bench_ablation"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated subset of: "
+                    + ",".join(n for n, _ in MODULES))
+    args = ap.parse_args()
+    only = {s for s in args.only.split(",") if s}
+
+    import importlib
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, modname in MODULES:
+        if only and name not in only:
+            continue
+        mod = importlib.import_module(modname)
+        try:
+            for row in mod.run():
+                print(row)
+                sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}")
+    print(f"# total_wall_s={time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

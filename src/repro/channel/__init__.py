@@ -1,0 +1,7 @@
+from repro.channel.wireless import (
+    WirelessChannel,
+    energy_joules,
+    shannon_rate,
+)
+
+__all__ = ["WirelessChannel", "shannon_rate", "energy_joules"]

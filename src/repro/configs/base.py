@@ -1,0 +1,240 @@
+"""Config system: model/arch configs, input shapes, and the arch registry.
+
+Every assigned architecture registers a ``ModelConfig`` here (one module per
+arch under ``repro/configs/``).  Configs are plain frozen dataclasses so they
+are hashable (usable as jit static args) and printable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to this paper.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One architecture. Covers dense / MoE / SSM / hybrid / enc-dec / VLM."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm | vision | trajectory
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    # --- attention options -------------------------------------------------
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    mrope_sections: Tuple[int, ...] = ()  # Qwen2-VL M-RoPE (t, h, w) splits
+    sliding_window: int = 0  # 0 = full attention; >0 enables SW variant
+    # --- MoE ----------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0  # per-expert hidden size (d_ff used for shared/dense)
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.001
+    # --- SSM / hybrid --------------------------------------------------------
+    ssm_state: int = 0
+    ssm_heads: int = 0  # mamba2 value heads; 0 -> derived
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    conv_kernel: int = 4
+    attn_every: int = 0  # hybrid: shared attention block every k layers
+    # --- enc-dec (whisper) ----------------------------------------------------
+    encoder_layers: int = 0
+    encoder_seq: int = 0  # frames after the (stubbed) conv frontend
+    # --- misc -----------------------------------------------------------------
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    remat: str = "none"  # none | full | dots  (activation checkpoint policy)
+    kv_cache_dtype: str = ""  # "" = activation dtype; "int8" = quantized cache
+    expert_dtype: str = ""  # "" = param dtype; "int8" = quantized expert weights
+    source: str = ""  # citation
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if long_500k decode is runnable (sub-quadratic path exists)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if self.family == "audio":
+            return False  # enc-dec: skipped, see DESIGN.md §4
+        return True  # dense/moe/vlm use the sliding-window decode variant
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def reduced(self) -> "ModelConfig":
+        """Reduced variant for CPU smoke tests (2 layers, d_model<=512, <=4 experts)."""
+        changes = dict(
+            num_layers=2,
+            d_model=min(self.d_model, 256),
+            num_heads=min(self.num_heads, 4),
+            num_kv_heads=min(self.num_kv_heads, 2),
+            head_dim=64,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 1024),
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_chunk=32,
+            ssm_heads=0,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+        )
+        if self.is_moe:
+            changes.update(
+                num_experts=min(self.num_experts, 4),
+                num_experts_per_tok=min(self.num_experts_per_tok, 2),
+                num_shared_experts=min(self.num_shared_experts, 1),
+                moe_d_ff=min(self.moe_d_ff or self.d_ff, 128),
+            )
+        if self.encoder_layers:
+            changes.update(encoder_layers=2, encoder_seq=64)
+        if self.attn_every:
+            changes.update(attn_every=2, num_layers=4)
+        return dataclasses.replace(self, **changes)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Federated / training config (the paper's system knobs)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    """Paper system model parameters (Table I defaults)."""
+
+    num_devices: int = 20  # N
+    rounds: int = 200  # R
+    round_duration: float = 10.0  # delta, seconds
+    learning_rate: float = 0.01  # eta
+    batch_size: int = 32
+    # mobility (exponential inter-contact model, §III-B)
+    mean_contact: float = 4.0  # c_n seconds
+    mean_intercontact: float = 400.0  # lambda_n seconds
+    speed: float = 0.0  # if >0: c=C/v, lambda=Lambda/v
+    contact_const: float = 40.0  # C
+    intercontact_const: float = 4000.0  # Lambda
+    # wireless (Table I)
+    bandwidth: float = 1e6  # B_n, Hz
+    carrier_ghz: float = 3.5
+    max_power: float = 0.2  # W
+    noise_dbm_hz: float = -174.0
+    value_bits: int = 32  # u
+    # energy / MADS
+    energy_budget: Tuple[float, float] = (50.0, 150.0)  # J, uniform range
+    lyapunov_v: float = 1e-4
+    # sparsification
+    sparsifier: str = "exact"  # exact | sampled
+    sample_size: int = 65536
+    # non-iid
+    dirichlet_rho: float = 0.5
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs():
+    if not _REGISTRY:
+        load_all()
+    return sorted(_REGISTRY)
+
+
+ASSIGNED_ARCHS = (
+    "qwen2-vl-72b",
+    "llama3.2-3b",
+    "internlm2-1.8b",
+    "qwen2-7b",
+    "qwen3-32b",
+    "mamba2-2.7b",
+    "whisper-large-v3",
+    "qwen2-moe-a2.7b",
+    "zamba2-7b",
+    "qwen3-moe-30b-a3b",
+)
+
+
+def load_all() -> None:
+    """Import every config module (they self-register)."""
+    import importlib
+
+    for mod in (
+        "qwen2_vl_72b",
+        "llama3_2_3b",
+        "internlm2_1_8b",
+        "qwen2_7b",
+        "qwen3_32b",
+        "mamba2_2_7b",
+        "whisper_large_v3",
+        "qwen2_moe_a2_7b",
+        "zamba2_7b",
+        "qwen3_moe_30b_a3b",
+        "resnet9_cifar10",
+        "lanegcn_argoverse",
+    ):
+        importlib.import_module(f"repro.configs.{mod}")

@@ -1,0 +1,23 @@
+"""LaneGCN-lite on Argoverse — the paper's trajectory-prediction model (§VI-C).
+
+ActorNet (1D conv + FPN-style fusion) + MapNet (graph conv over lane nodes) +
+FusionNet (actor<->map attention) + regression head predicting 30 future
+positions (3 s @ 10 Hz). ``d_model`` is the feature width (128 full size).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="lanegcn-argoverse",
+        family="trajectory",
+        num_layers=4,  # conv stages / gcn hops
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=256,
+        vocab_size=0,
+        dtype="float32",
+        param_dtype="float32",
+        source="paper §VI-C / Liang et al. ECCV20",
+    )
+)

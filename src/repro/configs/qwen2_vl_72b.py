@@ -1,0 +1,26 @@
+"""Qwen2-VL-72B language backbone [arXiv:2409.12191].
+
+VLM: 80L, d_model=8192, 64 heads (GQA kv=8), d_ff=29568, vocab=152064.
+M-RoPE (temporal/height/width sections over the head dim); the vision
+encoder (ViT + merger) is a STUB — ``input_specs`` feeds precomputed patch
+embeddings, per the assignment carve-out.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="qwen2-vl-72b",
+        family="vlm",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=29568,
+        vocab_size=152064,
+        qkv_bias=True,
+        rope_theta=1e6,
+        mrope_sections=(16, 24, 24),  # t/h/w per Qwen2-VL (sums to head_dim/2)
+        source="arXiv:2409.12191",
+    )
+)

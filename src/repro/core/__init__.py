@@ -1,0 +1,26 @@
+"""The paper's primary contribution: AFL + mobility-aware dynamic
+sparsification (MADS), as a composable JAX module.
+
+Submodules:
+  sparsify     top-k sparsification + error feedback (§III-D)
+  afl          Algorithm 1 — the AFL training process (simulation mode)
+  mads         Algorithm 2 — Lyapunov-controlled k/p (Propositions 1-2)
+  theory       Lemmas 2-4 / Theorems 1-2 / Corollary 1 closed forms
+  baselines    SFL-Spar, FedAsync, AFL-Spar, FedMobile, Optimal (§VI-B)
+  distributed  pjit AFL train step for the assigned architectures
+"""
+from repro.core.sparsify import (
+    bits_for_k,
+    k_for_bits,
+    sparsify_topk,
+    sparsify_tree,
+    threshold_for_k,
+)
+
+__all__ = [
+    "bits_for_k",
+    "k_for_bits",
+    "sparsify_topk",
+    "sparsify_tree",
+    "threshold_for_k",
+]

@@ -1,0 +1,181 @@
+"""Algorithm 1 — the AFL training process (simulation mode).
+
+One jitted ``afl_round`` advances the whole federation by one round:
+all N devices compute stochastic gradients (vmapped), the contacted subset
+uploads sparsified cumulative gradients with error feedback, the MES
+aggregates, and staleness / virtual-energy-queue bookkeeping advances.
+
+The upload policy (who sends what, at which k and p) is pluggable — MADS
+and every §VI-B baseline are policies over the same engine, so benchmark
+comparisons differ only in the policy, exactly like the paper's setup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparsify as SP
+from repro.core.mads import MadsController
+
+
+class AflState(NamedTuple):
+    w: Any  # global model pytree
+    w_n: Any  # per-device models, leaves stacked on leading N
+    g_n: Any  # cumulative gradients (eta-scaled), stacked
+    e_n: Any  # error memory, stacked
+    kappa: jax.Array  # (N,) last global-model reception round
+    q: jax.Array  # (N,) virtual energy queues
+    energy: jax.Array  # (N,) cumulative energy spent
+    rnd: jax.Array  # scalar round index r
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Engine flags + (k, p) selection strategy."""
+
+    name: str = "mads"
+    controller: MadsController | None = None
+    sparsify: bool = True  # False -> all-or-nothing full upload
+    error_feedback: bool = True
+    local_updates: bool = True  # SGD during inter-contact (False: SFL)
+    train_every_round: bool = True  # False: gradient only at contact (SFL)
+    energy_capped: bool = False  # hard stop when budget exhausted (AFL/AFL-Spar)
+    fixed_power: float = 0.0  # >0: transmit at this power (non-MADS baselines)
+
+    def select(self, ctl: MadsController, zeta, theta, x_norm2, q, tau, h2):
+        if self.controller is not None and self.fixed_power <= 0:
+            return self.controller.select(zeta, theta, x_norm2, q, tau, h2)
+        # fixed-power policies: k fills the contact window at power p_fix
+        from repro.core import mads as M
+
+        p = jnp.full_like(tau, self.fixed_power) * zeta
+        k = M.mads_k(p, tau, h2, ctl.s, ctl.u, ctl.bandwidth, ctl.noise_w_hz) * zeta
+        if not self.sparsify:
+            # full upload or nothing: feasible iff s fits in tau * A
+            feasible = k >= ctl.s
+            k = jnp.where(feasible, float(ctl.s), 0.0)
+            bits = SP.bits_for_k(k, ctl.s, ctl.u)
+            a = M.rate_bps(p, h2, ctl.bandwidth, ctl.noise_w_hz)
+            energy = jnp.where(feasible, p * bits / jnp.maximum(a, 1e-9), 0.0)
+            return k, p * feasible, energy
+        energy = p * tau
+        return k, p, energy
+
+
+def _bcast_to(cond, leaf):
+    return cond.reshape(cond.shape + (1,) * (leaf.ndim - 1))
+
+
+def _select(cond, a, b):
+    """Per-device select over stacked pytrees. cond: (N,) 0/1."""
+    return jax.tree.map(lambda x, y: jnp.where(_bcast_to(cond, x) != 0, x, y), a, b)
+
+
+def afl_init(model, cfg, fl, rng) -> AflState:
+    w = model.init(rng)
+    n = fl.num_devices
+    stack = lambda t: jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), t)
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros((n,) + x.shape, x.dtype), t)
+    return AflState(
+        w=w,
+        w_n=stack(w),
+        g_n=zeros(w),
+        e_n=zeros(w),
+        kappa=jnp.zeros((n,), jnp.int32),
+        q=jnp.zeros((n,), jnp.float32),
+        energy=jnp.zeros((n,), jnp.float32),
+        rnd=jnp.zeros((), jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("model", "cfg", "fl", "policy"))
+def afl_round(state: AflState, batch, zeta, tau, h2, energy_budget,
+              *, model, cfg, fl, policy: Policy) -> tuple[AflState, dict]:
+    """One round r of Algorithm 1.
+
+    batch: stacked per-device minibatches (leading N); zeta (N,) 0/1;
+    tau (N,) contact durations; h2 (N,) channel gains;
+    energy_budget (N,) E_n^con.
+    """
+    n = fl.num_devices
+    eta = fl.learning_rate
+    ctl = policy.controller or MadsController(s=model.num_params())
+    r = state.rnd + 1
+    theta = (r - state.kappa).astype(jnp.float32)
+
+    # --- local stochastic gradients (all devices, vmapped) -----------------
+    grad_fn = jax.vmap(jax.grad(lambda p, b: model.loss_fn(p, cfg, b)))
+    grads = grad_fn(state.w_n, batch)
+    if not policy.train_every_round:
+        grads = jax.tree.map(lambda g: g * _bcast_to(zeta.astype(g.dtype), g), grads)
+
+    g_new = jax.tree.map(lambda g, d: g + eta * d.astype(g.dtype), state.g_n, grads)
+
+    # --- upload decision (MADS or baseline policy) --------------------------
+    x = jax.tree.map(jnp.add, state.e_n, g_new)
+    x_norm2 = sum(
+        jnp.sum(jnp.square(l.astype(jnp.float32)), axis=tuple(range(1, l.ndim)))
+        for l in jax.tree.leaves(x)
+    )
+    zf = zeta.astype(jnp.float32)
+    k, p, energy = policy.select(ctl, zf, theta, x_norm2, state.q, tau, h2)
+    ok = zf > 0
+    if policy.energy_capped:
+        ok = ok & (state.energy + energy <= energy_budget)
+    k = k * ok
+    energy = energy * ok
+
+    # --- sparsification with error feedback --------------------------------
+    upload, e_after, k_actual = jax.vmap(
+        lambda t, kk: SP.sparsify_tree(t, kk, method=fl.sparsifier, sample=fl.sample_size)
+    )(x, k)
+    if ctl.u < 32:  # quantized wire format: EF absorbs the residual too
+        upload_q = jax.vmap(lambda t: SP.quantize_values(t, ctl.u))(upload)
+        e_after = jax.tree.map(lambda e, u, uq: e + (u - uq), e_after, upload, upload_q)
+        upload = upload_q
+    if not policy.error_feedback:
+        e_after = jax.tree.map(jnp.zeros_like, e_after)
+
+    okf = ok.astype(jnp.float32)
+    # --- MES aggregation: w <- w - (1/N) sum zeta S(x_n) --------------------
+    w_new = jax.tree.map(
+        lambda w, up: (
+            w - (jnp.tensordot(okf, up.astype(jnp.float32), axes=(0, 0)) / n).astype(w.dtype)
+        ),
+        state.w,
+        upload,
+    )
+
+    # --- device-side state transitions --------------------------------------
+    w_local = (
+        jax.tree.map(lambda wn, d: wn - eta * d.astype(wn.dtype), state.w_n, grads)
+        if policy.local_updates
+        else state.w_n
+    )
+    w_bcast = jax.tree.map(lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), w_new)
+    w_n_new = _select(okf, w_bcast, w_local)
+    e_n_new = _select(okf, e_after, state.e_n)
+    g_n_new = _select(okf, jax.tree.map(jnp.zeros_like, g_new), g_new)
+    kappa_new = jnp.where(ok, r, state.kappa)
+    q_new = ctl.queue_update(state.q, energy, energy_budget, fl.rounds)
+
+    metrics = {
+        "k": k_actual * okf,
+        "k_target": k,
+        "success": (k_actual > 0).astype(jnp.float32) * okf,
+        "power": p * okf,
+        "energy": energy,
+        "theta": theta,
+        "uploads": okf,
+        "x_norm2": x_norm2,
+        "queue": q_new,
+    }
+    new_state = AflState(
+        w=w_new, w_n=w_n_new, g_n=g_n_new, e_n=e_n_new,
+        kappa=kappa_new, q=q_new, energy=state.energy + energy, rnd=r,
+    )
+    return new_state, metrics

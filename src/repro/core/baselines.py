@@ -1,0 +1,131 @@
+"""§VI-B benchmark policies, all running on the Algorithm-1 engine.
+
+1. SFL-Spar   — synchronous FL with sparsification: no local training during
+                inter-contact; gradient computed only at contact rounds.
+2. AFL        — FedAsync [11]: continuous local training, FULL uploads
+                (all-or-nothing: fails when s(u+log2 s) > tau*A), energy-capped.
+3. AFL-Spar   — Algorithm 1 with contact-window-filling top-k at fixed max
+                power, energy-capped (consumes the budget then stops).
+4. FedMobile  — [16]: relaying boosts contact opportunities (schedule-level
+                transform: a non-contact device relays through a contacted
+                neighbour with probability p_relay, at halved effective
+                contact time for the two-hop path); FULL uploads.
+5. Optimal    — MADS structure without energy constraints (max feasible
+                power, k filling the window) — the paper's upper benchmark.
+6. MADS       — the proposed controller (Propositions 1-2 + queues).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.afl import Policy
+from repro.core.mads import MadsController
+
+
+def _controller(s: int, fl, **kw) -> MadsController:
+    return MadsController(
+        s=s,
+        u=fl.value_bits,
+        bandwidth=fl.bandwidth,
+        noise_w_hz=10 ** (fl.noise_dbm_hz / 10.0) / 1000.0,
+        p_max=fl.max_power,
+        v_weight=fl.lyapunov_v,
+        **kw,
+    )
+
+
+def mads(s: int, fl) -> Policy:
+    return Policy(name="mads", controller=_controller(s, fl))
+
+
+def optimal(s: int, fl) -> Policy:
+    return Policy(
+        name="optimal",
+        controller=_controller(s, fl, energy_unconstrained=True),
+    )
+
+
+def afl_spar(s: int, fl) -> Policy:
+    return Policy(
+        name="afl-spar",
+        controller=_controller(s, fl),
+        fixed_power=fl.max_power,
+        energy_capped=True,
+    )
+
+
+def fedasync(s: int, fl) -> Policy:
+    return Policy(
+        name="afl",
+        controller=_controller(s, fl),
+        sparsify=False,
+        error_feedback=False,
+        fixed_power=fl.max_power,
+        energy_capped=True,
+    )
+
+
+def sfl_spar(s: int, fl) -> Policy:
+    return Policy(
+        name="sfl-spar",
+        controller=_controller(s, fl),
+        fixed_power=fl.max_power,
+        local_updates=False,
+        train_every_round=False,
+        energy_capped=True,
+    )
+
+
+def fedmobile(s: int, fl) -> Policy:
+    # FedMobile = FedAsync + relays; the relay boost is applied to the
+    # (zeta, tau) schedule by ``apply_relays`` below.
+    return Policy(
+        name="fedmobile",
+        controller=_controller(s, fl),
+        sparsify=False,
+        error_feedback=False,
+        fixed_power=fl.max_power,
+        energy_capped=True,
+    )
+
+
+def apply_relays(zeta: np.ndarray, tau: np.ndarray, p_relay: float = 0.3,
+                 seed: int = 0):
+    """FedMobile schedule transform: a device not in contact may relay its
+    update through some contacted device (if any exists that round)."""
+    rng = np.random.default_rng(seed)
+    zeta = zeta.copy()
+    tau = tau.copy()
+    rounds, n = zeta.shape
+    for r in range(rounds):
+        direct = np.flatnonzero(zeta[r])
+        if len(direct) == 0:
+            continue
+        for d in np.flatnonzero(zeta[r] == 0):
+            if rng.random() < p_relay:
+                helper = rng.choice(direct)
+                zeta[r, d] = 1
+                tau[r, d] = 0.5 * tau[r, helper]  # two-hop halves the window
+    return zeta, tau
+
+
+def mads_no_ef(s: int, fl) -> Policy:
+    """Ablation: MADS without the error-feedback memory (dropped residuals).
+
+    Isolates the contribution of e_n (Stich et al. memory) to Algorithm 1 —
+    under heavy sparsification the dropped-coordinate mass is lost forever
+    without it, degrading convergence (see bench_ablation)."""
+    return Policy(
+        name="mads-noef", controller=_controller(s, fl), error_feedback=False
+    )
+
+
+ALL = {
+    "mads": mads,
+    "optimal": optimal,
+    "afl-spar": afl_spar,
+    "afl": fedasync,
+    "sfl-spar": sfl_spar,
+    "fedmobile": fedmobile,
+    "mads-noef": mads_no_ef,
+}

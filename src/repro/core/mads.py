@@ -1,0 +1,91 @@
+"""MADS — mobility-aware dynamic sparsification (paper §V, Algorithm 2).
+
+Per contact, each device solves P3 in closed form:
+
+* Proposition 1: the contact-time constraint is tight,
+      k* = tau * A(p*) / (u + log2 s).
+* Proposition 2: KKT water-filling power
+      p* = clip( 3 V zeta theta B ||x||^2 / (q s (u + log2 s))  -  B N0/|h|^2,
+                 0, P ),
+      P = min(p_max, (B N0/|h|^2) (2^{s (u+log2 s)/(tau B)} - 1)),
+  where the upper branch of P caps k at s (no point transmitting more than
+  every coordinate).
+* Virtual energy queue (eq. 8): q <- max(q + E - E_con/R, 0), E = p * tau
+  (payload always fills the contact window under Proposition 1).
+
+All functions are jnp-traceable so the controller runs inside the jitted
+AFL round (vmapped over devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def log2s(s: int, u: int) -> float:
+    import numpy as np
+
+    return float(u + np.ceil(np.log2(max(s, 2))))
+
+
+def rate_bps(p, h2, bandwidth, n0):
+    return bandwidth * jnp.log2(1.0 + p * h2 / (bandwidth * n0))
+
+
+def power_cap(tau, h2, s: int, u: int, bandwidth, n0, p_max):
+    """P_n^(r) in Proposition 2: cap from (14b) k<=s, and p_max."""
+    exponent = float(s) * log2s(s, u) / (jnp.maximum(tau, 1e-9) * bandwidth)
+    exponent = jnp.minimum(exponent, 60.0)  # avoid inf for tiny tau
+    p_k_cap = bandwidth * n0 / jnp.maximum(h2, 1e-30) * (2.0**exponent - 1.0)
+    return jnp.minimum(p_max, p_k_cap)
+
+
+def mads_power(v_weight, zeta, theta, x_norm2, q, tau, h2, s: int, u: int,
+               bandwidth, n0, p_max):
+    """Proposition 2 closed form."""
+    cap = power_cap(tau, h2, s, u, bandwidth, n0, p_max)
+    num = 3.0 * v_weight * zeta * theta * bandwidth * x_norm2
+    den = jnp.maximum(q, 1e-12) * float(s) * log2s(s, u)
+    p = num / den - bandwidth * n0 / jnp.maximum(h2, 1e-30)
+    return jnp.clip(p, 0.0, cap)
+
+
+def mads_k(p, tau, h2, s: int, u: int, bandwidth, n0):
+    """Proposition 1: k* = tau A / (u + log2 s), clipped to [0, s]."""
+    a = rate_bps(p, h2, bandwidth, n0)
+    return jnp.clip(tau * a / log2s(s, u), 0.0, float(s))
+
+
+@dataclasses.dataclass(frozen=True)
+class MadsController:
+    """Per-round (k, p) selection + queue bookkeeping (Algorithm 2)."""
+
+    s: int  # model size
+    u: int = 32
+    bandwidth: float = 1e6
+    noise_w_hz: float = 10 ** (-174.0 / 10.0) / 1000.0
+    p_max: float = 0.2
+    v_weight: float = 1e-4
+    energy_unconstrained: bool = False  # the "Optimal" benchmark
+
+    def select(self, zeta, theta, x_norm2, q, tau, h2):
+        """All inputs per-device arrays. Returns (k, p, energy)."""
+        if self.energy_unconstrained:
+            p = power_cap(tau, h2, self.s, self.u, self.bandwidth, self.noise_w_hz,
+                          self.p_max)
+        else:
+            p = mads_power(
+                self.v_weight, zeta, theta.astype(jnp.float32), x_norm2, q, tau, h2,
+                self.s, self.u, self.bandwidth, self.noise_w_hz, self.p_max,
+            )
+        k = mads_k(p, tau, h2, self.s, self.u, self.bandwidth, self.noise_w_hz)
+        k = k * zeta
+        p = p * zeta
+        energy = p * tau  # E = p * bits/A = p * tau under Proposition 1
+        return k, p, energy
+
+    def queue_update(self, q, energy, energy_budget, rounds: int):
+        """Virtual queue evolution, eq. (8)."""
+        return jnp.maximum(q + energy - energy_budget / rounds, 0.0)

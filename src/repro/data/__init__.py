@@ -1,0 +1,17 @@
+from repro.data.partition import dirichlet_partition, gamma_class_proportions
+from repro.data.synthetic import (
+    SyntheticCifar,
+    SyntheticTokens,
+    SyntheticTrajectories,
+)
+from repro.data.loader import DeviceLoader, batch_iterator
+
+__all__ = [
+    "SyntheticCifar",
+    "SyntheticTokens",
+    "SyntheticTrajectories",
+    "dirichlet_partition",
+    "gamma_class_proportions",
+    "DeviceLoader",
+    "batch_iterator",
+]

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret
+mode on CPU; production dispatch in ops.py falls back to the jnp oracle on
+non-TPU backends).
+
+  sparsify_ef  fused threshold-mask + error-feedback update (the paper's
+               per-round sparsification pass)
+  decode_attn  flash-decode attention for 32k-500k KV caches
+  ssd_scan     chunked Mamba2/SSD scan with VMEM-resident chunk state
+"""

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: flash-decode attention (one query token vs a deep KV
+cache).
+
+decode_32k / long_500k are memory-bound: the step reads the whole cache
+(B x S x KV x D x 2) once.  The kernel streams KV blocks through VMEM with
+an online-softmax accumulator so no (B, H, S) score tensor ever reaches HBM
+— unlike the naive jnp path which materialises scores + probabilities
+(~2x B*H*S*4 bytes of extra HBM traffic at S = 32k-500k).
+
+Grid: (B, KV_heads, S/BLOCK_S); the last axis iterates sequentially on TPU,
+so the running (m, l, acc) state lives in revisited output blocks
+(accumulator pattern), finalised as acc / l in the jit wrapper.
+GQA: each KV head serves G = H/KV query rows; blocks are (G, D) x (BS, D)
+MXU matmuls with D = 128-aligned head dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_S = 512
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, m_ref, l_ref, acc_ref):
+    sblk = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (BS, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)  # (BS, D)
+    length = len_ref[0]
+    d = q.shape[-1]
+    scale = jax.lax.rsqrt(jnp.asarray(d, jnp.float32))
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, BS)
+    pos = sblk * BLOCK_S + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, -jnp.inf)
+
+    @pl.when(sblk == 0)
+    def _init():
+        m_ref[0, 0] = jnp.full_like(m_ref[0, 0], -jnp.inf)
+        l_ref[0, 0] = jnp.zeros_like(l_ref[0, 0])
+        acc_ref[0, 0] = jnp.zeros_like(acc_ref[0, 0])
+
+    m_prev = m_ref[0, 0]  # (G,)
+    l_prev = l_ref[0, 0]
+    acc_prev = acc_ref[0, 0]  # (G, D)
+
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(jnp.isfinite(m_new)[:, None], p, 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    acc_new = acc_prev * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
+    acc_ref[0, 0] = acc_new
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attn(q: jax.Array, k: jax.Array, v: jax.Array, length, *,
+                interpret: bool = True):
+    """q: (B, H, D); k, v: (B, S, KV, D); length: scalar valid entries.
+
+    Returns (B, H, D) in q.dtype.
+    """
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qr = q.reshape(b, kv, g, d)
+    blocks = (s + BLOCK_S - 1) // BLOCK_S
+    pad = blocks * BLOCK_S - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lv = jnp.minimum(jnp.asarray(length, jnp.int32), s).reshape(1)
+
+    m, l, acc = pl.pallas_call(
+        _kernel,
+        grid=(b, kv, blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, ki, si: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, BLOCK_S, 1, d), lambda bi, ki, si: (bi, si, ki, 0)),
+            pl.BlockSpec((1, BLOCK_S, 1, d), lambda bi, ki, si: (bi, si, ki, 0)),
+            pl.BlockSpec((1,), lambda bi, ki, si: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g), lambda bi, ki, si: (bi, ki, 0)),
+            pl.BlockSpec((1, 1, g), lambda bi, ki, si: (bi, ki, 0)),
+            pl.BlockSpec((1, 1, g, d), lambda bi, ki, si: (bi, ki, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kv, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, k, v, lv)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, h, d).astype(q.dtype)

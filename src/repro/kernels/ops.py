@@ -1,0 +1,46 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``impl`` selection:
+  "auto"              Pallas compiled on TPU, pure-jnp reference elsewhere
+                      (this container is CPU, so production dispatch falls
+                      back to the oracle — the kernels are validated in
+                      interpret mode by the test suite).
+  "pallas"            pl.pallas_call compiled (TPU).
+  "pallas_interpret"  kernel body executed in Python on CPU (tests).
+  "ref"               pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref as REF
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sparsify_ef(x, threshold, *, impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return REF.sparsify_ef_ref(x, threshold)
+    from repro.kernels import sparsify_ef as K
+
+    return K.sparsify_ef(x, threshold, interpret=(impl == "pallas_interpret"))
+
+
+def decode_attn(q, k, v, length, *, impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return REF.decode_attn_ref(q, k, v, length)
+    from repro.kernels import decode_attn as K
+
+    return K.decode_attn(q, k, v, length, interpret=(impl == "pallas_interpret"))
+
+
+def ssd_scan(x, a, b, c, *, chunk: int = 128, impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        from repro.models.mamba2 import ssd_chunked
+
+        return ssd_chunked(x, a, b, c, chunk)
+    from repro.kernels import ssd_scan as K
+
+    return K.ssd_scan(x, a, b, c, chunk=chunk, interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sparsify_ef_ref(x: jax.Array, threshold: jax.Array):
+    """Fused sparsify + error-feedback reference.
+
+    x: (n,) any float dtype; threshold: scalar f32.
+    Returns (upload, error, count): upload = x where |x|>=t else 0,
+    error = x - upload, count = #selected (f32).
+    """
+    mask = jnp.abs(x.astype(jnp.float32)) >= threshold
+    upload = jnp.where(mask, x, jnp.zeros_like(x))
+    error = jnp.where(mask, jnp.zeros_like(x), x)
+    return upload, error, jnp.sum(mask).astype(jnp.float32)
+
+
+def decode_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array, length):
+    """Single-token GQA decode attention reference.
+
+    q: (B, H, D); k, v: (B, S, KV, D); length: scalar or (B,) valid entries.
+    Returns (B, H, D).
+    """
+    b, s, kv, d = k.shape
+    h = q.shape[1]
+    groups = h // kv
+    qf = q.astype(jnp.float32).reshape(b, kv, groups, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qf, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    valid = jnp.arange(s)[None, :] < jnp.reshape(jnp.asarray(length), (-1, 1))
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def ssd_scan_ref(x, a, b, c, initial_state=None):
+    """Sequential SSD recurrence reference (exact, O(S) scan).
+
+    x: (B,S,H,P) dt-scaled inputs; a: (B,S,H) log decays; b,c: (B,S,N).
+    Returns y: (B,S,H,P), final_state: (B,H,P,N). All f32 internally.
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    st0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(carry, t):
+        st = carry
+        dec = jnp.exp(af[:, t])[..., None, None]  # (B,H,1,1)
+        upd = xf[:, t][..., None] * bf[:, t][:, None, None, :]  # (B,H,P,N)
+        st = st * dec + upd
+        y_t = jnp.einsum("bhpn,bn->bhp", st, cf[:, t])
+        return st, y_t
+
+    st, ys = jax.lax.scan(step, st0, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3), st

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused sparsify + error-feedback update.
+
+The paper's per-round hot spot: every contacted device transforms its
+upload vector x (model-sized, 6.5M-72B elements) into
+    upload = x * [|x| >= t],   error = x * [|x| < t],   count = popcount
+Naive jnp issues three separate elementwise passes (2 reads + 2 writes + a
+reduce read).  The fused kernel streams x through VMEM once per block and
+emits both outputs + a per-block partial count: 1 read + 2 writes — a 40%
+HBM-traffic cut on a purely memory-bound op.
+
+Layout: x viewed as (rows, 1024) f32/bf16, blocked (BLOCK_R, 1024) —
+lane-dim 1024 = 8 x 128 keeps the VPU tiles full and 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 1024
+BLOCK_R = 256  # (256, 1024) f32 = 1 MiB per ref — comfortably inside VMEM
+
+
+def _kernel(x_ref, t_ref, up_ref, err_ref, cnt_ref):
+    x = x_ref[...]
+    t = t_ref[0]
+    mask = jnp.abs(x.astype(jnp.float32)) >= t
+    zeros = jnp.zeros_like(x)
+    up_ref[...] = jnp.where(mask, x, zeros)
+    err_ref[...] = jnp.where(mask, zeros, x)
+    cnt_ref[0] = jnp.sum(mask.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparsify_ef(x: jax.Array, threshold: jax.Array, *, interpret: bool = True):
+    """x: (n,) -> (upload (n,), error (n,), count scalar f32).
+
+    Pads n up to a LANE*BLOCK_R multiple internally; padding cannot pass the
+    threshold (padded with 0 and t > 0 handled via +inf sentinel for pads).
+    """
+    n = x.size
+    t = jnp.asarray(threshold, jnp.float32).reshape(1)
+    per_block = LANE * BLOCK_R
+    blocks = max((n + per_block - 1) // per_block, 1)
+    padded = blocks * per_block
+    xp = jnp.pad(x.reshape(-1), (0, padded - n)).reshape(blocks * BLOCK_R, LANE)
+    # zero padding is safe: |0| >= t only if t <= 0, and threshold_for_k
+    # returns +inf for k < 1; count correction below handles t <= 0.
+    up, err, cnt = pl.pallas_call(
+        _kernel,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),  # scalar threshold, broadcast
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_R, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((blocks * BLOCK_R, LANE), x.dtype),
+            jax.ShapeDtypeStruct((blocks * BLOCK_R, LANE), x.dtype),
+            jax.ShapeDtypeStruct((blocks,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, t)
+    count = jnp.sum(cnt)
+    # correct for zero padding counted when t <= 0
+    pad_elems = padded - n
+    count = count - jnp.where(t[0] <= 0, float(pad_elems), 0.0)
+    return up.reshape(-1)[:n], err.reshape(-1)[:n], count

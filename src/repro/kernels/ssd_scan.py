@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: chunked SSD (Mamba2) scan.
+
+Computes, per (batch, head), the state-space-duality recurrence in chunks:
+intra-chunk quadratic term ((C B^T) ⊙ L) X with L = exp(segsum(a)), plus the
+inter-chunk state recurrence carried in a revisited (P, N) output block —
+the chunk axis is the sequential (last) grid dimension, so the state flows
+chunk-to-chunk entirely inside VMEM instead of bouncing (B,H,P,N) states
+through HBM between chunks as the pure-jnp scan does.
+
+Grid: (B, H, S/Q).  Blocks: x (Q, P), a (Q,), b/c (Q, N), y (Q, P),
+state (P, N) — Q and P MXU-aligned (Q=128-256, P=64, N=64-128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, st_ref):
+    ci = pl.program_id(2)
+    x = x_ref[0, 0, 0].astype(jnp.float32)  # (Q, P)
+    a = a_ref[0, 0, 0].astype(jnp.float32)  # (Q,)
+    b = b_ref[0, 0, 0].astype(jnp.float32)  # (Q, N)
+    c = c_ref[0, 0, 0].astype(jnp.float32)  # (Q, N)
+    q = x.shape[0]
+
+    @pl.when(ci == 0)
+    def _init():
+        st_ref[0, 0] = jnp.zeros_like(st_ref[0, 0])
+
+    st = st_ref[0, 0]  # (P, N)
+
+    a_cum = jnp.cumsum(a)  # (Q,)
+    diff = a_cum[:, None] - a_cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (q, q), 1
+    )
+    lmat = jnp.where(tri, jnp.exp(diff), 0.0)  # (Q, Q)
+
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    y_diag = jnp.dot(cb * lmat, x, preferred_element_type=jnp.float32)  # (Q, P)
+
+    # inter-chunk contribution from the carried state
+    y_off = jnp.dot(c, st.T, preferred_element_type=jnp.float32) * jnp.exp(a_cum)[:, None]
+
+    # new chunk state: sum_s exp(a_total - a_cum[s]) * x[s] b[s]^T
+    decay = jnp.exp(a_cum[-1] - a_cum)  # (Q,)
+    st_new = st * jnp.exp(a_cum[-1]) + jnp.dot(
+        (x * decay[:, None]).T, b, preferred_element_type=jnp.float32
+    )
+
+    y_ref[0, 0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+    st_ref[0, 0] = st_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array, *,
+             chunk: int = 128, interpret: bool = True):
+    """x: (B,S,H,P) dt-scaled input; a: (B,S,H) log decay; b,c: (B,S,N).
+
+    Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32). S % chunk == 0.
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    xr = x.transpose(0, 2, 1, 3).reshape(bsz, h, nc, q, p)
+    ar = a.transpose(0, 2, 1).reshape(bsz, h, nc, q)
+    br = jnp.broadcast_to(b.reshape(bsz, 1, nc, q, n), (bsz, h, nc, q, n))
+    cr = jnp.broadcast_to(c.reshape(bsz, 1, nc, q, n), (bsz, h, nc, q, n))
+
+    y, st = pl.pallas_call(
+        _kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, 1, q, n), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q, n), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, nc, q, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xr, ar, br, cr)
+    y = y.reshape(bsz, h, s, p).transpose(0, 2, 1, 3)
+    return y, st

@@ -1,0 +1,180 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_DRYRUN_EXTRA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x input shape) on the
+production meshes, print memory/cost analysis, extract roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --all                 # 16x16 sweep
+  python -m repro.launch.dryrun --all --multi-pod     # 2x16x16 sweep
+Results are appended as JSON lines to --out (default EXPERIMENTS-dryrun.jsonl)
+and are the data source for EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.launch import roofline as RL  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_step, resolve_cfg, supported  # noqa: E402
+from repro.models.registry import N_IMG_PATCHES  # noqa: E402
+
+
+def active_params(cfg, model) -> int:
+    """Approximate activated parameters per token (MoE: routed top-k only)."""
+    total = model.num_params()
+    if not cfg.is_moe:
+        return total
+    f = cfg.moe_d_ff or cfg.d_ff
+    per_expert = 3 * cfg.d_model * f
+    routed_all = cfg.num_experts * per_expert
+    routed_active = cfg.num_experts_per_tok * per_expert
+    return total - cfg.num_layers * (routed_all - routed_active)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, out_path: str,
+            dist_overrides: dict | None = None, tag: str = "baseline",
+            variant: str = "default", cfg_overrides: dict | None = None,
+            dump_hlo: str | None = None) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    if cfg_overrides:
+        cfg0 = cfg0.replace(**cfg_overrides)
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod, "tag": tag,
+        "time": time.strftime("%Y-%m-%d %H:%M:%S"),
+    }
+    if not supported(cfg0, shape):
+        rec.update(status="skipped", reason="long_500k unsupported (see DESIGN.md §4)")
+        _append(out_path, rec)
+        print(json.dumps(rec))
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        world = mesh.devices.size
+        built = build_step(cfg0, shape, mesh, dist_overrides=dist_overrides,
+                           variant=variant)
+        cfg, model = built["cfg"], built["model"]
+        with mesh:
+            jitted = jax.jit(built["step"], in_shardings=built["in_shardings"])
+            lowered = jitted.lower(*built["args"])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            hlo = compiled.as_text()
+        if dump_hlo:
+            with open(dump_hlo, "w") as f:
+                f.write(hlo)
+
+        from repro.launch.calculator import step_analytics
+
+        tokens = shape.global_batch * (
+            shape.seq_len if shape.kind != "decode" else 1
+        )
+        mf = RL.model_flops(
+            model.num_params(), tokens, active_params(cfg, model),
+            train=(shape.kind == "train"),
+        )
+        mp = 1 if (variant == "dp_client" and shape.kind == "train") else 0
+        analytic = step_analytics(cfg, shape, world, model.num_params(),
+                                  model_parallel=mp)
+        roof = RL.analyze(
+            compiled, hlo, world, model_flops_total=mf, analytic=analytic,
+            scan_trips=max(cfg.num_layers, 1),
+        )
+
+        rec.update(
+            status="ok",
+            world=world,
+            num_params=model.num_params(),
+            active_params=active_params(cfg, model),
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            mem=dict(
+                argument_gb=mem.argument_size_in_bytes / 1e9,
+                output_gb=mem.output_size_in_bytes / 1e9,
+                temp_gb=mem.temp_size_in_bytes / 1e9,
+            ),
+            roofline=roof.as_dict(),
+        )
+        print(
+            f"[dryrun] {arch} x {shape_name} ({'2x16x16' if multi_pod else '16x16'}"
+            f", {tag}): OK compile={t_compile:.0f}s "
+            f"flops/dev={roof.flops:.3e} hbm/dev={roof.hbm_bytes:.3e} "
+            f"coll/dev={roof.coll_bytes:.3e} bottleneck={roof.bottleneck} "
+            f"temp={rec['mem']['temp_gb']:.1f}GB arg={rec['mem']['argument_gb']:.1f}GB"
+        )
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        print(f"[dryrun] {arch} x {shape_name}: FAIL {type(e).__name__}: {e}")
+    _append(out_path, rec)
+    return rec
+
+
+def _append(path: str, rec: dict) -> None:
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (see configs)")
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true", help="sweep all arch x shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="EXPERIMENTS-dryrun.jsonl")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--variant", default="default", choices=["default", "dp_client"])
+    ap.add_argument("--upload-dtype", default=None, help="e.g. bfloat16")
+    ap.add_argument("--accum-dtype", default=None, help="e.g. bfloat16")
+    ap.add_argument("--kv-cache-dtype", default=None, help="e.g. int8")
+    ap.add_argument("--expert-dtype", default=None, help="e.g. int8")
+    ap.add_argument("--remat", default=None, help="none|full|dots")
+    ap.add_argument("--dump-hlo", default=None, help="write optimized HLO text here")
+    args = ap.parse_args()
+
+    dist_overrides = {}
+    if args.upload_dtype:
+        dist_overrides["upload_dtype"] = args.upload_dtype
+    if args.accum_dtype:
+        dist_overrides["accum_dtype"] = args.accum_dtype
+    cfg_overrides = {}
+    if args.kv_cache_dtype:
+        cfg_overrides["kv_cache_dtype"] = args.kv_cache_dtype
+    if args.expert_dtype:
+        cfg_overrides["expert_dtype"] = args.expert_dtype
+    if args.remat:
+        cfg_overrides["remat"] = args.remat
+
+    pairs = []
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    if args.all:
+        archs, shapes = list(ASSIGNED_ARCHS), list(INPUT_SHAPES)
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    for mp in meshes:
+        for a, s in pairs:
+            run_one(a, s, multi_pod=mp, out_path=args.out, tag=args.tag,
+                    variant=args.variant, dist_overrides=dist_overrides or None,
+                    cfg_overrides=cfg_overrides or None, dump_hlo=args.dump_hlo)
+
+
+if __name__ == "__main__":
+    main()

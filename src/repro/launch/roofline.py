@@ -1,0 +1,174 @@
+"""Roofline-term extraction from compiled dry-run artifacts (DESIGN.md §6).
+
+Terms (per device, seconds):
+  compute    = FLOPs / peak_FLOPs              (197 TFLOP/s bf16, v5e-class)
+  memory     = HBM bytes / HBM_bw              (819 GB/s)
+  collective = per-device ICI bytes / link_bw  (50 GB/s)
+
+Sources: XLA's ``cost_analysis`` counts ``while`` (=``lax.scan``) bodies
+ONCE, so for scanned-layer models it under-reports by ~num_layers.  The
+compute/memory terms therefore come from the analytic calculator
+(``launch/calculator.py``); the HLO text supplies the collective structure,
+with collectives found inside while-loop bodies scaled by the layer-scan
+trip count.  Raw HLO numbers are retained in every record for cross-checks.
+
+Ring-algorithm byte factors:
+  all-reduce       2 (g-1)/g * result_bytes
+  all-gather         (g-1)/g * result_bytes (result = gathered tensor)
+  reduce-scatter     (g-1)   * result_bytes (result = local shard)
+  all-to-all         (g-1)/g * result_bytes
+  collective-permute          result_bytes
+
+``cost_analysis``/``as_text`` of a GSPMD-partitioned executable describe the
+per-device program, so every term here is already per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"all-reduce-start|all-gather-start|collective-permute-start)\b(.*)$"
+)
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_BODY_REF_RE = re.compile(r"body=%?([\w.\-]+)")
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)  # iota v2: [num_groups, group_size]
+    return world
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+    scanned_bytes: float = 0.0  # portion that was scaled by scan trips
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str, world: int, scan_trips: int = 1) -> CollectiveStats:
+    # first pass: which computations are while-loop bodies?
+    bodies = set(_BODY_REF_RE.findall(hlo_text))
+    bytes_by: Dict[str, float] = {}
+    count_by: Dict[str, int] = {}
+    scanned = 0.0
+    current = ""
+    for line in hlo_text.splitlines():
+        head = _COMP_HEAD_RE.match(line.strip())
+        if head:
+            current = head.group(1)
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result, kind, _rest = m.groups()
+        kind = kind.replace("-start", "")
+        g = _group_size(line, world)
+        rb = _shape_bytes(result)
+        if kind == "all-reduce":
+            moved = 2.0 * (g - 1) / g * rb
+        elif kind == "all-gather":
+            moved = (g - 1) / g * rb
+        elif kind == "reduce-scatter":
+            moved = float(g - 1) * rb
+        elif kind == "all-to-all":
+            moved = (g - 1) / g * rb
+        else:
+            moved = float(rb)
+        if current in bodies:
+            moved *= scan_trips
+            scanned += moved
+        bytes_by[kind] = bytes_by.get(kind, 0.0) + moved
+        count_by[kind] = count_by.get(kind, 0) + 1
+    return CollectiveStats(bytes_by, count_by, scanned)
+
+
+def model_flops(num_params: int, tokens: int, active_params: int | None = None,
+                train: bool = False) -> float:
+    """MODEL_FLOPS = 6 N D for training (2 N D serving); MoE uses N_active."""
+    mult = 6.0 if train else 2.0
+    return mult * float(active_params or num_params) * float(tokens)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # analytic, per device
+    hbm_bytes: float  # analytic, per device
+    coll_bytes: float  # HLO-parsed (scan-scaled), per device
+    hlo_flops_raw: float  # cost_analysis (scan bodies counted once)
+    hlo_bytes_raw: float
+    coll_detail: Dict[str, float]
+    coll_counts: Dict[str, int]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_total: float
+    useful_ratio: float  # MODEL_FLOPS / analytic total FLOPs
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, hlo_text: str, world: int, *, model_flops_total: float,
+            analytic=None, scan_trips: int = 1) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    hlo_flops = float(ca.get("flops", 0.0))
+    hlo_bytes = float(ca.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text, world, scan_trips)
+    flops_dev = analytic.flops_per_device if analytic else hlo_flops
+    hbm_dev = analytic.hbm_bytes_per_device if analytic else hlo_bytes
+    flops_total = analytic.flops_total if analytic else hlo_flops * world
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = hbm_dev / HBM_BW
+    t_x = coll.total_bytes / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops_total / max(flops_total, 1e-9)
+    return Roofline(
+        flops=flops_dev, hbm_bytes=hbm_dev, coll_bytes=coll.total_bytes,
+        hlo_flops_raw=hlo_flops, hlo_bytes_raw=hlo_bytes,
+        coll_detail=coll.bytes_by_kind, coll_counts=coll.count_by_kind,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck, model_flops_total=model_flops_total,
+        useful_ratio=useful,
+    )

@@ -1,0 +1,169 @@
+"""Step factories for every (arch x input-shape) combination.
+
+For each shape kind this module builds (step_fn, example_args, in_shardings)
+ready for ``jax.jit(...).lower(...)``:
+
+* train_4k     -> the distributed AFL round (the paper's technique),
+* prefill_32k  -> prompt pass returning (last logits, KV/recurrent cache),
+* decode_32k   -> one-token decode against a seq_len cache,
+* long_500k    -> one-token decode, sub-quadratic path (ring-buffer sliding
+                  window for full-attention archs; native recurrent state for
+                  SSM/hybrid).  Skipped for whisper (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.core.distributed import DistConfig, make_afl_train_system, mesh_num_clients
+from repro.models.registry import Model, build_model, input_specs
+from repro.sharding import rules as R
+
+SLIDING_WINDOW = 8192  # ring-buffer size for long-context decode
+
+
+def resolve_cfg(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Shape-specific config tweaks (sliding-window for long_500k; remat on
+    for training — without it the saved flash-scan carries are TBs/device)."""
+    if (
+        shape.name == "long_500k"
+        and cfg.family in ("dense", "moe", "vlm")
+        and cfg.sliding_window == 0
+    ):
+        cfg = cfg.replace(sliding_window=SLIDING_WINDOW)
+    if shape.kind == "train" and cfg.remat == "none":
+        cfg = cfg.replace(remat="full")
+    return cfg
+
+
+def supported(cfg: ModelConfig, shape: InputShape) -> bool:
+    if shape.name == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+def _input_shardings(dims_tree, shapes_tree_, rules, mesh):
+    return jax.tree.map(
+        lambda d, s: NamedSharding(mesh, R.logical_to_pspec(tuple(d), tuple(s.shape), rules, mesh)),
+        dims_tree,
+        shapes_tree_,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(i, (str, type(None))) for i in x),
+    )
+
+
+def _param_shardings(model: Model, rules, mesh):
+    shapes = R.shapes_tree(model.specs)
+    return R.sharding_tree(model.param_axes(), shapes, rules, mesh)
+
+
+def _abstract_params(model: Model):
+    shapes = R.shapes_tree(model.specs)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), shapes)
+
+
+def cache_max_seq(cfg: ModelConfig, shape: InputShape) -> int:
+    if cfg.family in ("ssm",):
+        return 0
+    if shape.name == "long_500k":
+        return SLIDING_WINDOW
+    return shape.seq_len
+
+
+WARN_VARIANTS = ("default", "dp_client")
+
+# dp_client (§Perf beyond-paper variant): replicate params, keep clients on
+# (pod, data), and data-parallel each client's sequences over the `model`
+# axis.  Removes ALL per-layer tensor-parallel activation collectives; what
+# remains is one within-client gradient all-reduce + the AFL upload
+# aggregation.  Right for small-d_model archs where 16-way TP is overkill.
+RULES_TRAIN_DP = {
+    "client": [("pod", "data"), ("data",)],
+    "batch": [("pod", "data", "model"), ("data", "model")],
+    **{k: [None] for k in (
+        "layers", "vocab", "embed", "heads", "kv_heads", "head_dim", "mlp",
+        "experts", "expert_mlp", "ssm_heads", "ssm_state", "ssm_inner",
+        "conv", "seq", "pos",
+    )},
+}
+
+
+def build_step(arch_cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+               *, dist_overrides: dict | None = None,
+               variant: str = "default"):
+    """Returns dict(step, args, in_shardings, model, cfg)."""
+    cfg = resolve_cfg(arch_cfg, shape)
+    model = build_model(cfg)
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        if variant == "dp_client":
+            rules = RULES_TRAIN_DP
+        else:
+            rules = dict(R.RULES_TRAIN, client=[("pod", "data"), ("data",)])
+        over = dist_overrides or {}
+        dcfg = DistConfig(num_clients=mesh_num_clients(mesh), **over)
+        sys_ = make_afl_train_system(model, cfg, mesh, dcfg, rules=rules)
+        tree, dims = input_specs(cfg, shape)
+        b_sh = _input_shardings(dims, tree, rules, mesh)
+        n = dcfg.num_clients
+        scal = jax.ShapeDtypeStruct((n,), jnp.float32)
+        args = (sys_["abstract_state"](), tree, scal, scal, scal, scal)
+        in_sh = (sys_["state_shardings"], b_sh, rep, rep, rep, rep)
+        return dict(step=sys_["step"], args=args, in_shardings=in_sh,
+                    model=model, cfg=cfg, system=sys_)
+
+    rules = R.RULES_SERVE
+    params = _abstract_params(model)
+    p_sh = _param_shardings(model, rules, mesh)
+    tree, dims = input_specs(cfg, shape)
+    b_sh = _input_shardings(dims, tree, rules, mesh)
+
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            from repro.models import transformer as T
+            from repro.models import vlm as V
+
+            def step(params, batch):
+                emb = params["embed"]["tok"]
+                text = emb[batch["tokens"]].astype(cfg.activation_dtype)
+                x = jnp.concatenate(
+                    [batch["vision_embeds"].astype(cfg.activation_dtype), text], axis=1
+                )
+                bsz, n_img = batch["vision_embeds"].shape[:2]
+                grid = int(max(n_img, 1) ** 0.5) or 1
+                pos = V.mrope_positions(bsz, n_img, batch["tokens"].shape[1], grid)
+                return T.prefill(params, cfg, None, embeds=x, positions=pos)
+
+        elif cfg.family == "audio":
+            def step(params, batch):
+                return model.prefill(params, cfg, batch["tokens"], frames=batch["frames"])
+
+        else:
+            def step(params, batch):
+                return model.prefill(params, cfg, batch["tokens"])
+
+        return dict(step=step, args=(params, tree), in_shardings=(p_sh, b_sh),
+                    model=model, cfg=cfg)
+
+    # decode
+    max_seq = cache_max_seq(cfg, shape)
+    cache = jax.eval_shape(lambda: model.init_cache(cfg, shape.global_batch, max_seq))
+    c_axes = model.cache_axes(cfg)
+    c_sh = jax.tree.map(
+        lambda d, s: NamedSharding(mesh, R.logical_to_pspec(tuple(d), tuple(s.shape), rules, mesh)),
+        c_axes, cache,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(i, (str, type(None))) for i in x),
+    )
+
+    def step(params, cache, token, pos):
+        return model.decode_step(params, cfg, cache, token, pos)
+
+    args = (params, cache, tree["token"], tree["pos"])
+    in_sh = (p_sh, c_sh, b_sh["token"], rep)
+    return dict(step=step, args=args, in_shardings=in_sh, model=model, cfg=cfg)

@@ -1,0 +1,4 @@
+from repro.mobility.contact import ContactProcess, contact_schedule
+from repro.mobility.waypoint import RandomWaypoint, measure_contact_stats
+
+__all__ = ["ContactProcess", "contact_schedule", "RandomWaypoint", "measure_contact_stats"]

@@ -1,0 +1,90 @@
+"""Exponential contact / inter-contact process (paper §III-B).
+
+Each device alternates contact periods tau ~ Exp(mean c_n) and
+inter-contact gaps t ~ Exp(mean lambda_n).  Rounds have duration delta;
+zeta_n^(r) = 1 in the round where a contact event begins (one upload
+opportunity per contact, with the full sampled contact duration tau
+available for the transfer) — matching the paper's abstraction where
+tau_n^(r) bounds the upload bits via tau * A.
+
+With speed coupling (Lemma/Corollary setting): c = C / v, lambda = L / v.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ContactProcess:
+    num_devices: int
+    mean_contact: float  # c_n
+    mean_intercontact: float  # lambda_n
+    round_duration: float  # delta
+    seed: int = 0
+
+    @classmethod
+    def from_speed(cls, num_devices, speed, contact_const, intercontact_const,
+                   round_duration, seed=0):
+        v = max(speed, 1e-6)
+        return cls(
+            num_devices,
+            mean_contact=contact_const / v,
+            mean_intercontact=intercontact_const / v,
+            round_duration=round_duration,
+            seed=seed,
+        )
+
+    def sample_rounds(self, rounds: int):
+        """Returns (zeta, tau): each (rounds, num_devices).
+
+        Per Algorithm 1's zeta_n^(r): a device is "in contact in round r" for
+        EVERY round its contact period overlaps.  tau[r, n] is the upload
+        window available in that round: the full sampled contact duration in
+        the round where the contact begins (the paper's tau ~ Exp(c)), and
+        the remaining duration from the round boundary for continuation
+        rounds of a long contact.
+        """
+        rng = np.random.default_rng(self.seed)
+        delta = self.round_duration
+        horizon = rounds * delta
+        zeta = np.zeros((rounds, self.num_devices), np.int32)
+        tau = np.zeros((rounds, self.num_devices), np.float64)
+        for n in range(self.num_devices):
+            # start either in contact or in a gap, per renewal stationarity
+            p_contact = self.mean_contact / (self.mean_contact + self.mean_intercontact)
+            t = 0.0
+            in_contact = rng.random() < p_contact
+            while t < horizon:
+                if in_contact:
+                    dur = max(rng.exponential(self.mean_contact), 1e-9)
+                    end = t + dur
+                    r0 = int(t / delta)
+                    r1 = int(min(end, horizon - 1e-9) / delta)
+                    for r in range(r0, min(r1 + 1, rounds)):
+                        if zeta[r, n]:
+                            continue
+                        zeta[r, n] = 1
+                        tau[r, n] = dur if r == r0 else end - r * delta
+                    t = end
+                else:
+                    t += max(rng.exponential(self.mean_intercontact), 1e-9)
+                in_contact = not in_contact
+        return zeta, tau.astype(np.float32)
+
+
+def contact_schedule(fl, rounds: int, seed: int | None = None):
+    """Build (zeta, tau) from an FLConfig (speed-coupled if fl.speed > 0)."""
+    seed = fl.seed if seed is None else seed
+    if fl.speed > 0:
+        proc = ContactProcess.from_speed(
+            fl.num_devices, fl.speed, fl.contact_const, fl.intercontact_const,
+            fl.round_duration, seed,
+        )
+    else:
+        proc = ContactProcess(
+            fl.num_devices, fl.mean_contact, fl.mean_intercontact,
+            fl.round_duration, seed,
+        )
+    return proc.sample_rounds(rounds)

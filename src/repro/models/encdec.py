@@ -1,0 +1,255 @@
+"""Whisper-style encoder-decoder transformer [arXiv:2212.04356].
+
+The mel-spectrogram + two-conv frontend is a STUB per the assignment:
+``frames`` (B, encoder_seq, d_model) arrive as precomputed frame embeddings.
+Encoder: bidirectional self-attention with sinusoidal positions.
+Decoder: causal self-attention (KV cache) + cross-attention to the encoder
+output (cross K/V precomputed once at prefill) + GELU MLP.
+Pre-LN LayerNorm throughout (whisper uses LN, not RMSNorm).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.transformer import stack_specs
+from repro.sharding.rules import ParamSpec
+
+
+def _ln_specs(cfg):
+    return {
+        "scale": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "bias": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+
+
+def _gelu_mlp_specs(cfg):
+    return {
+        "wi": ParamSpec((cfg.d_model, cfg.d_ff), ("embed", "mlp")),
+        "bi": ParamSpec((cfg.d_ff,), ("mlp",), init="zeros"),
+        "wo": ParamSpec((cfg.d_ff, cfg.d_model), ("mlp", "embed")),
+        "bo": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+
+
+def _gelu_mlp(p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype)) + p["bi"].astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype)) + p["bo"].astype(x.dtype)
+
+
+def _enc_block_specs(cfg):
+    return {
+        "ln_attn": _ln_specs(cfg),
+        "attn": L.attn_specs(cfg),
+        "ln_mlp": _ln_specs(cfg),
+        "mlp": _gelu_mlp_specs(cfg),
+    }
+
+
+def _dec_block_specs(cfg):
+    return {
+        "ln_self": _ln_specs(cfg),
+        "self_attn": L.attn_specs(cfg),
+        "ln_cross": _ln_specs(cfg),
+        "cross_attn": L.attn_specs(cfg),
+        "ln_mlp": _ln_specs(cfg),
+        "mlp": _gelu_mlp_specs(cfg),
+    }
+
+
+def param_specs(cfg) -> dict:
+    return {
+        "embed": L.embed_specs(cfg),
+        "enc_layers": stack_specs(_enc_block_specs(cfg), cfg.encoder_layers),
+        "enc_ln_f": _ln_specs(cfg),
+        "dec_layers": stack_specs(_dec_block_specs(cfg), cfg.num_layers),
+        "dec_ln_f": _ln_specs(cfg),
+        "unembed": {
+            "w": ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), init="small")
+        },
+    }
+
+
+def _sinusoid(seq: int, d: int):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _ln(p, x, eps):
+    return L.layer_norm(x, p["scale"], p["bias"], eps)
+
+
+def encode(params, cfg, frames):
+    """frames: (B, encoder_seq, d_model) stub embeddings -> encoder output."""
+    x = frames.astype(cfg.activation_dtype)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def body(carry, lp):
+        x = carry
+        h = _ln(lp["ln_attn"], x, cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp["attn"], cfg, h)
+        attn = L.causal_attention(q, k, v, causal=False)
+        x = x + L.attn_out(lp["attn"], attn, x.dtype)
+        h = _ln(lp["ln_mlp"], x, cfg.norm_eps)
+        return x + _gelu_mlp(lp["mlp"], h), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return _ln(params["enc_ln_f"], x, cfg.norm_eps)
+
+
+def decode_full(params, cfg, tokens, enc_out):
+    """Teacher-forced decoder pass (training). tokens: (B, S)."""
+    x = params["embed"]["tok"][tokens].astype(cfg.activation_dtype)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def body(carry, lp):
+        x = carry
+        h = _ln(lp["ln_self"], x, cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp["self_attn"], cfg, h)
+        attn = L.causal_attention(q, k, v)
+        x = x + L.attn_out(lp["self_attn"], attn, x.dtype)
+        h = _ln(lp["ln_cross"], x, cfg.norm_eps)
+        q2, _, _ = L.attn_qkv(lp["cross_attn"], cfg, h)
+        k2 = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wk"].astype(x.dtype))
+        v2 = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wv"].astype(x.dtype))
+        if cfg.qkv_bias:
+            k2 = k2 + lp["cross_attn"]["bk"].astype(x.dtype)
+            v2 = v2 + lp["cross_attn"]["bv"].astype(x.dtype)
+        xatt = L.causal_attention(q2, k2, v2, causal=False)
+        x = x + L.attn_out(lp["cross_attn"], xatt, x.dtype)
+        h = _ln(lp["ln_mlp"], x, cfg.norm_eps)
+        return x + _gelu_mlp(lp["mlp"], h), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = _ln(params["dec_ln_f"], x, cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", x, params["unembed"]["w"].astype(x.dtype))
+
+
+def forward(params, cfg, tokens, *, frames=None, **_):
+    enc = encode(params, cfg, frames)
+    return decode_full(params, cfg, tokens, enc), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch):
+    logits, _ = forward(params, cfg, batch["tokens"], frames=batch["frames"])
+    return L.cross_entropy(logits, batch["labels"])
+
+
+def init_cache(cfg, batch: int, max_seq: int):
+    hd = cfg.resolved_head_dim
+    dt = cfg.activation_dtype
+    lcount = cfg.num_layers
+    return {
+        "k": jnp.zeros((lcount, batch, max_seq, cfg.num_kv_heads, hd), dt),
+        "v": jnp.zeros((lcount, batch, max_seq, cfg.num_kv_heads, hd), dt),
+        # cross-attention K/V, precomputed from the encoder output at prefill
+        "xk": jnp.zeros((lcount, batch, cfg.encoder_seq, cfg.num_kv_heads, hd), dt),
+        "xv": jnp.zeros((lcount, batch, cfg.encoder_seq, cfg.num_kv_heads, hd), dt),
+        "pos": jnp.full((batch, max_seq), -1, jnp.int32),
+    }
+
+
+def cache_axes(cfg):
+    kv = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    return {"k": kv, "v": kv,
+            "xk": ("layers", "batch", "pos", "kv_heads", "head_dim"),
+            "xv": ("layers", "batch", "pos", "kv_heads", "head_dim"),
+            "pos": ("batch", "seq")}
+
+
+def precompute_cross_kv(params, cfg, enc_out):
+    def one(lp):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wv"].astype(enc_out.dtype))
+        if cfg.qkv_bias:
+            k = k + lp["cross_attn"]["bk"].astype(enc_out.dtype)
+            v = v + lp["cross_attn"]["bv"].astype(enc_out.dtype)
+        return k, v
+
+    ks, vs = jax.lax.map(one, params["dec_layers"])
+    return ks, vs
+
+
+def prefill(params, cfg, tokens, *, frames=None, max_seq=None, **_):
+    """Encoder + teacher-forced decoder prompt pass; returns (logits, cache)."""
+    enc = encode(params, cfg, frames)
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    x = params["embed"]["tok"][tokens].astype(cfg.activation_dtype)
+    x = x + _sinusoid(s, cfg.d_model).astype(x.dtype)[None]
+
+    def body(carry, lp):
+        x = carry
+        h = _ln(lp["ln_self"], x, cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp["self_attn"], cfg, h)
+        attn = L.causal_attention(q, k, v)
+        x = x + L.attn_out(lp["self_attn"], attn, x.dtype)
+        h = _ln(lp["ln_cross"], x, cfg.norm_eps)
+        q2, _, _ = L.attn_qkv(lp["cross_attn"], cfg, h)
+        k2 = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wk"].astype(x.dtype))
+        v2 = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wv"].astype(x.dtype))
+        if cfg.qkv_bias:
+            k2 = k2 + lp["cross_attn"]["bk"].astype(x.dtype)
+            v2 = v2 + lp["cross_attn"]["bv"].astype(x.dtype)
+        xatt = L.causal_attention(q2, k2, v2, causal=False)
+        x = x + L.attn_out(lp["cross_attn"], xatt, x.dtype)
+        h = _ln(lp["ln_mlp"], x, cfg.norm_eps)
+        return x + _gelu_mlp(lp["mlp"], h), (k, v, k2, v2)
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["dec_layers"])
+    x = _ln(params["dec_ln_f"], x, cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["unembed"]["w"].astype(x.dtype))
+    pad = ((0, 0), (0, 0), (0, max_seq - s), (0, 0), (0, 0))
+    pos_arr = jnp.where(jnp.arange(max_seq)[None] < s, jnp.arange(max_seq)[None], -1)
+    cache = {
+        "k": jnp.pad(ks, pad), "v": jnp.pad(vs, pad), "xk": xks, "xv": xvs,
+        "pos": jnp.broadcast_to(pos_arr, (b, max_seq)).astype(jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, token, pos):
+    x = params["embed"]["tok"][token][:, None, :].astype(cfg.activation_dtype)
+    b = x.shape[0]
+    s_cache = cache["k"].shape[2]
+    d = cfg.d_model
+    posf = jnp.asarray(pos, jnp.int32)
+    pe = _sinusoid(s_cache, d)[jnp.minimum(posf, s_cache - 1)]
+    x = x + pe[None, None].reshape(1, 1, d).astype(x.dtype)
+    slot = posf % s_cache
+    new_pos = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.broadcast_to(posf, (b, 1)), (0, slot)
+    )
+
+    def body(carry, xs):
+        x = carry
+        lp, kc, vc, xk, xv = xs
+        h = _ln(lp["ln_self"], x, cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp["self_attn"], cfg, h)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, slot, 0, 0))
+        attn = L.decode_attention(q[:, 0], kc, vc, length=jnp.minimum(pos + 1, s_cache),
+                                  window_pos=new_pos)
+        x = x + L.attn_out(lp["self_attn"], attn[:, None], x.dtype)
+        h = _ln(lp["ln_cross"], x, cfg.norm_eps)
+        q2, _, _ = L.attn_qkv(lp["cross_attn"], cfg, h)
+        xatt = L.decode_attention(q2[:, 0], xk, xv, length=xk.shape[1])
+        x = x + L.attn_out(lp["cross_attn"], xatt[:, None], x.dtype)
+        h = _ln(lp["ln_mlp"], x, cfg.norm_eps)
+        return x + _gelu_mlp(lp["mlp"], h), (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    x = _ln(params["dec_ln_f"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"]["w"].astype(x.dtype))[:, 0]
+    new_cache = dict(cache, k=ks, v=vs, pos=new_pos)
+    return logits, new_cache

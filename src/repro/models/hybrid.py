@@ -1,0 +1,237 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block
+applied every ``cfg.attn_every`` layers [arXiv:2411.15242].
+
+The backbone is split into segments of ``attn_every`` mamba layers; the
+shared attention block (one weight copy) runs before every segment except
+the first.  Because the shared block sees *different activations* at each
+depth, decode keeps a separate KV-cache slot per invocation
+(``n_attn = (num_layers - 1) // attn_every`` slots), while weights stay
+shared — faithful to Zamba2's parameter-sharing trick.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models.transformer import stack_specs
+from repro.sharding.rules import ParamSpec
+
+
+def n_attn_calls(cfg) -> int:
+    return max((cfg.num_layers - 1) // cfg.attn_every, 1)
+
+
+def segments(cfg):
+    """Layer counts per segment: [attn_every, attn_every, ..., remainder]."""
+    sizes, left = [], cfg.num_layers
+    while left > 0:
+        take = min(cfg.attn_every, left)
+        sizes.append(take)
+        left -= take
+    return sizes
+
+
+def param_specs(cfg) -> dict:
+    return {
+        "embed": L.embed_specs(cfg),
+        "layers": stack_specs(M2.block_specs(cfg), cfg.num_layers),
+        "shared_attn": {
+            "ln": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+            "attn": L.attn_specs(cfg),
+        },
+        "ln_f": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "unembed": {
+            "w": ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), init="small")
+        },
+    }
+
+
+def _shared_attn(params, cfg, x, cos, sin):
+    sp = params["shared_attn"]
+    h = L.rms_norm(x, sp["ln"], cfg.norm_eps)
+    q, k, v = L.attn_qkv(sp["attn"], cfg, h)
+    q, k = L.apply_rope(q, k, cos, sin)
+    attn = L.causal_attention(q, k, v)
+    return x + L.attn_out(sp["attn"], attn, x.dtype)
+
+
+def _mamba_scan(cfg, layer_params, x):
+    def body(carry, lp):
+        x = carry
+        h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, _ = M2.mamba_block(lp["mamba"], cfg, h)
+        return x + y, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, layer_params)
+    return x
+
+
+def forward(params, cfg, tokens, **_):
+    x = params["embed"]["tok"][tokens].astype(cfg.activation_dtype)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    cos, sin = L.rope_cos_sin(positions, cfg.resolved_head_dim, cfg.rope_theta)
+
+    off = 0
+    for i, size in enumerate(segments(cfg)):
+        if i > 0:
+            x = _shared_attn(params, cfg, x, cos, sin)
+        seg = jax.tree.map(lambda a: a[off : off + size], params["layers"])
+        x = _mamba_scan(cfg, seg, x)
+        off += size
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"]["w"].astype(x.dtype))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch):
+    logits, _ = forward(params, cfg, batch["tokens"])
+    return L.cross_entropy(logits, batch["labels"])
+
+
+def init_cache(cfg, batch: int, max_seq: int):
+    hd = cfg.resolved_head_dim
+    na = len(segments(cfg)) - 1
+    dt = cfg.activation_dtype
+    c = M2.init_cache(cfg, batch)
+    c["attn_k"] = jnp.zeros((na, batch, max_seq, cfg.num_kv_heads, hd), dt)
+    c["attn_v"] = jnp.zeros((na, batch, max_seq, cfg.num_kv_heads, hd), dt)
+    c["pos"] = jnp.full((batch, max_seq), -1, jnp.int32)
+    return c
+
+
+def cache_axes(cfg):
+    ax = M2.cache_axes(cfg)
+    ax["attn_k"] = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    ax["attn_v"] = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    ax["pos"] = ("batch", "seq")
+    return ax
+
+
+def prefill(params, cfg, tokens, *, max_seq=None, **_):
+    """Run the prompt: returns (last logits, recurrent + shared-attn cache)."""
+    x = params["embed"]["tok"][tokens].astype(cfg.activation_dtype)
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    cos, sin = L.rope_cos_sin(positions, cfg.resolved_head_dim, cfg.rope_theta)
+
+    ak, av = [], []
+    conv = {k: [] for k in ("conv_x", "conv_B", "conv_C")}
+    ssm_all = []
+    off = 0
+    for i, size in enumerate(segments(cfg)):
+        if i > 0:
+            sp = params["shared_attn"]
+            h = L.rms_norm(x, sp["ln"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(sp["attn"], cfg, h)
+            q, k = L.apply_rope(q, k, cos, sin)
+            attn = L.causal_attention(q, k, v)
+            x = x + L.attn_out(sp["attn"], attn, x.dtype)
+            ak.append(k)
+            av.append(v)
+
+        def body(carry, lp):
+            x = carry
+            h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+            y, cvs, st = M2.mamba_block(lp["mamba"], cfg, h, collect_cache=True)
+            return x + y, (cvs["x"], cvs["B"], cvs["C"], st)
+
+        seg = jax.tree.map(lambda a: a[off : off + size], params["layers"])
+        x, (cx, cb, cc, st) = jax.lax.scan(body, x, seg)
+        conv["conv_x"].append(cx)
+        conv["conv_B"].append(cb)
+        conv["conv_C"].append(cc)
+        ssm_all.append(st)
+        off += size
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["unembed"]["w"].astype(x.dtype))
+    pad = ((0, 0), (0, 0), (0, max_seq - s), (0, 0), (0, 0))
+    attn_k = jnp.pad(jnp.stack(ak, 0), pad) if ak else jnp.zeros(
+        (0, b, max_seq, cfg.num_kv_heads, cfg.resolved_head_dim), x.dtype
+    )
+    attn_v = jnp.pad(jnp.stack(av, 0), pad) if av else jnp.zeros_like(attn_k)
+    pos_arr = jnp.where(jnp.arange(max_seq)[None] < s, jnp.arange(max_seq)[None], -1)
+    cache = {
+        "conv_x": jnp.concatenate(conv["conv_x"], 0),
+        "conv_B": jnp.concatenate(conv["conv_B"], 0),
+        "conv_C": jnp.concatenate(conv["conv_C"], 0),
+        "ssm": jnp.concatenate(ssm_all, 0),
+        "attn_k": attn_k,
+        "attn_v": attn_v,
+        "pos": jnp.broadcast_to(pos_arr, (b, max_seq)).astype(jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, token, pos):
+    x = params["embed"]["tok"][token][:, None, :].astype(cfg.activation_dtype)
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    s_cache = cache["attn_k"].shape[2]
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None], (b, 1))
+    cos, sin = L.rope_cos_sin(posb, hd, cfg.rope_theta)
+    slot = (pos % s_cache).astype(jnp.int32) if hasattr(pos, "astype") else pos % s_cache
+    new_pos = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b, 1)), (0, slot)
+    )
+
+    new_ak, new_av = [], []
+    new_conv = {k: [] for k in ("conv_x", "conv_B", "conv_C")}
+    new_ssm = []
+    off = 0
+    for i, size in enumerate(segments(cfg)):
+        if i > 0:
+            sp = params["shared_attn"]
+            h = L.rms_norm(x, sp["ln"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(sp["attn"], cfg, h)
+            q, k = L.apply_rope(q, k, cos, sin)
+            ak = jax.lax.dynamic_update_slice(
+                cache["attn_k"][i - 1], k.astype(cache["attn_k"].dtype), (0, slot, 0, 0)
+            )
+            av = jax.lax.dynamic_update_slice(
+                cache["attn_v"][i - 1], v.astype(cache["attn_v"].dtype), (0, slot, 0, 0)
+            )
+            attn = L.decode_attention(q[:, 0], ak, av, length=jnp.minimum(pos + 1, s_cache),
+                                      window_pos=new_pos)
+            x = x + L.attn_out(sp["attn"], attn[:, None], x.dtype)
+            new_ak.append(ak)
+            new_av.append(av)
+
+        def body(carry, xs):
+            x = carry
+            lp, cx, cb, cc, ssm = xs
+            h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+            y, nc, ns = M2.mamba_block(
+                lp["mamba"], cfg, h, conv_state={"x": cx, "B": cb, "C": cc}, ssm_state=ssm
+            )
+            return x + y, (nc["x"], nc["B"], nc["C"], ns)
+
+        seg = jax.tree.map(lambda a: a[off : off + size], params["layers"])
+        segc = [cache[k][off : off + size] for k in ("conv_x", "conv_B", "conv_C")]
+        x, (cx, cb, cc, ssm) = jax.lax.scan(
+            body, x, (seg, segc[0], segc[1], segc[2], cache["ssm"][off : off + size])
+        )
+        new_conv["conv_x"].append(cx)
+        new_conv["conv_B"].append(cb)
+        new_conv["conv_C"].append(cc)
+        new_ssm.append(ssm)
+        off += size
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"]["w"].astype(x.dtype))[:, 0]
+    new_cache = {
+        "conv_x": jnp.concatenate(new_conv["conv_x"], 0),
+        "conv_B": jnp.concatenate(new_conv["conv_B"], 0),
+        "conv_C": jnp.concatenate(new_conv["conv_C"], 0),
+        "ssm": jnp.concatenate(new_ssm, 0),
+        "attn_k": jnp.stack(new_ak, 0) if new_ak else cache["attn_k"],
+        "attn_v": jnp.stack(new_av, 0) if new_av else cache["attn_v"],
+        "pos": new_pos,
+    }
+    return logits, new_cache

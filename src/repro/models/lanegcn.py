@@ -1,0 +1,89 @@
+"""LaneGCN-lite for Argoverse-style motion forecasting (paper §VI-C).
+
+ActorNet: 1D conv stack over the past trajectory; MapNet: graph convolutions
+over lane-centreline nodes (chain adjacency); FusionNet: actor->map and
+map->actor attention; regression head predicts 30 future (x, y) offsets.
+Metric/loss: ADE (mean Euclidean displacement), as in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import ParamSpec
+
+
+def param_specs(cfg) -> dict:
+    d = cfg.d_model
+    future = 30
+
+    def lin(i, o, name_in="mlp"):
+        return {
+            "w": ParamSpec((i, o), (None, "mlp")),
+            "b": ParamSpec((o,), ("mlp",), init="zeros"),
+        }
+
+    return {
+        "actor_conv1": {"w": ParamSpec((3, 2, d), (None, None, "mlp")),
+                        "b": ParamSpec((d,), ("mlp",), init="zeros")},
+        "actor_conv2": {"w": ParamSpec((3, d, d), (None, None, "mlp")),
+                        "b": ParamSpec((d,), ("mlp",), init="zeros")},
+        "map_in": lin(2, d),
+        "gcn1": lin(2 * d, d),
+        "gcn2": lin(2 * d, d),
+        "fuse_q": lin(d, d),
+        "fuse_k": lin(d, d),
+        "fuse_v": lin(d, d),
+        "head1": lin(2 * d, cfg.d_ff),
+        "head2": lin(cfg.d_ff, future * 2),
+    }
+
+
+def _lin(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _conv1d(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+    return jax.nn.relu(y + p["b"])
+
+
+def forward(params, cfg, batch_past, batch_lanes, **_):
+    """past: (B, 20, 2); lanes: (B, M, 2) -> predicted future (B, 30, 2)."""
+    x = batch_past.astype(jnp.float32)
+    a = _conv1d(params["actor_conv1"], x)
+    a = _conv1d(params["actor_conv2"], a, stride=2)
+    actor = jnp.max(a, axis=1)  # (B, d)
+
+    m = jax.nn.relu(_lin(params["map_in"], batch_lanes.astype(jnp.float32)))  # (B,M,d)
+    # chain-adjacency graph conv: neighbour mean = (prev + next)/2
+    for key in ("gcn1", "gcn2"):
+        prev = jnp.roll(m, 1, axis=1)
+        nxt = jnp.roll(m, -1, axis=1)
+        neigh = 0.5 * (prev + nxt)
+        m = jax.nn.relu(_lin(params[key], jnp.concatenate([m, neigh], -1)))
+
+    q = _lin(params["fuse_q"], actor)[:, None, :]  # (B,1,d)
+    k = _lin(params["fuse_k"], m)
+    v = _lin(params["fuse_v"], m)
+    att = jax.nn.softmax(
+        jnp.einsum("bqd,bmd->bqm", q, k) / jnp.sqrt(cfg.d_model).astype(jnp.float32), -1
+    )
+    ctx = jnp.einsum("bqm,bmd->bqd", att, v)[:, 0]  # (B,d)
+
+    h = jax.nn.relu(_lin(params["head1"], jnp.concatenate([actor, ctx], -1)))
+    out = _lin(params["head2"], h).reshape(-1, 30, 2)
+    return out, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch):
+    pred, _ = forward(params, cfg, batch["past"], batch["lanes"])
+    return ade(pred, batch["future"])
+
+
+def ade(pred, target):
+    """Average displacement error (paper's Argoverse metric)."""
+    return jnp.mean(jnp.linalg.norm(pred - target.astype(jnp.float32), axis=-1))

@@ -1,0 +1,335 @@
+"""Shared neural building blocks (pure functions over param dicts).
+
+Conventions:
+* activations default to ``cfg.dtype`` (bf16), reductions in f32;
+* attention is memory-efficient (online-softmax over KV chunks) so that
+  32k-token prefill lowers without materialising S x S score matrices;
+* GQA is implemented by repeating KV heads at compute time;
+* RoPE supports plain rotary and Qwen2-VL M-RoPE (t/h/w sections);
+* decode uses a KV cache, optionally a ring buffer (sliding window) which is
+  what makes 500k-context decode sub-quadratic for full-attention archs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float, sections: Tuple[int, ...] = ()):
+    """cos/sin tables.
+
+    positions: (B, S) for plain RoPE or (3, B, S) for M-RoPE.
+    Returns (cos, sin) of shape (B, S, head_dim/2) in f32.
+    """
+    inv = rope_freqs(head_dim, theta)  # (hd/2,)
+    if not sections:
+        ang = positions.astype(jnp.float32)[..., None] * inv  # (B,S,hd/2)
+        return jnp.cos(ang), jnp.sin(ang)
+    # M-RoPE: frequency slots are split into contiguous (t, h, w) sections and
+    # each section consumes the matching positional stream (Qwen2-VL §2.1).
+    assert positions.ndim == 3 and positions.shape[0] == len(sections)
+    ang_all = positions.astype(jnp.float32)[..., None] * inv  # (3,B,S,hd/2)
+    pieces, off = [], 0
+    for i, sec in enumerate(sections):
+        pieces.append(ang_all[i, ..., off : off + sec])
+        off += sec
+    ang = jnp.concatenate(pieces, axis=-1)  # (B,S,hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(q, k, cos, sin):
+    """q: (B,S,H,D), k: (B,S,KV,D); cos/sin: (B,S,D/2)."""
+    c = cos[:, :, None, :].astype(jnp.float32)
+    s = sin[:, :, None, :].astype(jnp.float32)
+    qf = _rotate(q.astype(jnp.float32), c, s).astype(q.dtype)
+    kf = _rotate(k.astype(jnp.float32), c, s).astype(k.dtype)
+    return qf, kf
+
+
+def text_mrope_positions(batch: int, seq: int) -> jnp.ndarray:
+    """For pure-text streams all three M-RoPE position channels coincide."""
+    pos = jnp.broadcast_to(jnp.arange(seq)[None, :], (batch, seq))
+    return jnp.broadcast_to(pos[None], (3, batch, seq))
+
+
+# ---------------------------------------------------------------------------
+# Attention (online-softmax over KV chunks)
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(k, groups: int):
+    if groups == 1:
+        return k
+    b, s, kv, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, d)).reshape(b, s, kv * groups, d)
+
+
+def causal_attention(
+    q,
+    k,
+    v,
+    *,
+    chunk: int = 1024,
+    sliding_window: int = 0,
+    causal: bool = True,
+    q_offset: int = 0,
+):
+    """Memory-efficient attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D).  Online softmax accumulates over
+    KV chunks so peak memory is O(Sq * chunk) per head rather than O(Sq*Sk).
+    ``q_offset`` is the absolute position of q[0] (for prefill continuation).
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    groups = h // max(kv, 1)
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    chunk = min(chunk, sk)
+    n_chunks = (sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    qf = q.astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc, idx = carry
+        kb, vb = xs
+        k_pos = idx * chunk + jnp.arange(chunk)
+        s_ = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32)) * scale
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if sliding_window:
+            mask &= q_pos[:, None] - k_pos[None, :] < sliding_window
+        mask &= (k_pos < sk)[None, :]
+        s_ = jnp.where(mask[None, None], s_, -jnp.inf)
+        m_new = jnp.maximum(m, s_.max(-1))
+        p = jnp.exp(s_ - m_new[..., None])
+        p = jnp.where(jnp.isfinite(m_new)[..., None], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new, idx + 1), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, acc0, jnp.asarray(0)), (kc, vc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,Sq,H,D)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, window_pos=None):
+    """Single-token attention against a KV cache.
+
+    q: (B, H, D); caches: (B, S, KV, D); ``length``: number of valid cache
+    entries (scalar or (B,)).  ``window_pos`` (ring-buffer mode): absolute
+    positions per cache slot (B, S) used for masking instead of slot index.
+    """
+    b, s, kv, d = k_cache.shape
+    h = q.shape[1]
+    if window_pos is None and jax.default_backend() == "tpu":
+        # flash-decode Pallas kernel (repro/kernels/decode_attn.py)
+        from repro.kernels import ops as KOPS
+
+        return KOPS.decode_attn(q, k_cache, v_cache, length, impl="pallas")
+    groups = h // max(kv, 1)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qf = _replicate(q.astype(jnp.float32).reshape(b, kv, groups, d))
+    kf = k_cache.astype(jnp.float32)
+    s_ = jnp.einsum("bkgd,bskd->bkgs", qf, kf) * scale
+    if window_pos is None:
+        valid = jnp.arange(s)[None, :] < jnp.reshape(length, (-1, 1))
+    else:
+        valid = window_pos >= 0
+    s_ = jnp.where(valid[:, None, None, :], s_, -jnp.inf)
+    p = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def quantize_kv(x):
+    """Symmetric per-(token, head) int8 quantisation. x: (B,S,KV,D).
+
+    Returns (int8 values, f32 scales (B,S,KV)). Beyond-paper serving
+    optimisation: halves decode KV-cache HBM traffic (§Perf)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)  # (B,S,KV)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _replicate(x):
+    """Force a (tiny) operand fully replicated before a decode-attention
+    einsum.  When GQA head counts don't align with the model axis, GSPMD
+    resolves the q-vs-cache sharding mismatch by ALL-GATHERING the CACHE
+    (measured: 537 MB f32/step on qwen3-moe decode_32k; pinning the cache's
+    own sharding instead made GSPMD permute it — both refuted, §Perf
+    C-series).  Replicating q (B*H*D ~ 100 KB) makes the partial-score +
+    all-reduce strategy the natural choice.  No-op outside a mesh context."""
+    try:
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(x, P())
+    except Exception:  # no mesh: leave to propagation
+        return x
+
+
+def decode_attention_q(q, kq, vq, k_scale, v_scale, length, *, window_pos=None):
+    """decode_attention over an int8 cache; scales applied to score/prob
+    rows so the dequantised cache never materialises.
+
+    q: (B,H,D); kq, vq: (B,S,KV,D) int8; scales: (B,S,KV) f32."""
+    b, s, kv, d = kq.shape
+    h = q.shape[1]
+    groups = h // max(kv, 1)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qf = _replicate(q.astype(jnp.float32).reshape(b, kv, groups, d))
+    s_ = jnp.einsum("bkgd,bskd->bkgs", qf, kq.astype(jnp.float32)) * scale
+    s_ = s_ * k_scale.transpose(0, 2, 1)[:, :, None, :]  # (B,KV,1,S)
+    if window_pos is None:
+        valid = jnp.arange(s)[None, :] < jnp.reshape(length, (-1, 1))
+    else:
+        valid = window_pos >= 0
+    s_ = jnp.where(valid[:, None, None, :], s_, -jnp.inf)
+    p = jax.nn.softmax(s_, axis=-1)
+    p = p * v_scale.transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vq.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block parameter specs + apply
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg) -> dict:
+    hd = cfg.resolved_head_dim
+    sp = {
+        "wq": ParamSpec((cfg.d_model, cfg.num_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((cfg.d_model, cfg.num_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((cfg.d_model, cfg.num_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((cfg.num_heads, hd, cfg.d_model), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = ParamSpec((cfg.num_heads, hd), ("heads", "head_dim"), init="zeros")
+        sp["bk"] = ParamSpec((cfg.num_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros")
+        sp["bv"] = ParamSpec((cfg.num_kv_heads, hd), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        sp["q_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+        sp["k_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+    return sp
+
+
+def attn_qkv(p, cfg, x):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attn_out(p, x_attn, dtype):
+    return jnp.einsum("bshk,hkd->bsd", x_attn, p["wo"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU) + embeddings
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg, d_ff: Optional[int] = None) -> dict:
+    ff = d_ff or cfg.d_ff
+    return {
+        "wi_gate": ParamSpec((cfg.d_model, ff), ("embed", "mlp")),
+        "wi_up": ParamSpec((cfg.d_model, ff), ("embed", "mlp")),
+        "wo": ParamSpec((ff, cfg.d_model), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+
+
+def cross_entropy(logits, labels):
+    """Sharding-friendly next-token CE (mean over all positions).
+
+    Uses logsumexp + a one-hot contraction instead of ``take_along_axis`` —
+    a vocab-sharded logits tensor then needs only small all-reduces over the
+    vocab shards, not an all-gather of the full (T, V) logits (§Perf B1).
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)  # (B, S)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    label_logit = jnp.einsum("...v,...v->...", lf, onehot)
+    return jnp.mean(lse - label_logit)
+
+
+def embed_specs(cfg) -> dict:
+    return {"tok": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), init="small")}
+
+
+def unembed(params, cfg, x):
+    """Project to vocab logits (tied or untied)."""
+    w = params["embed"]["tok"] if cfg.tie_embeddings else params["unembed"]["w"]
+    return jnp.einsum("bsd,vd->bsv", x, w.astype(x.dtype)) if cfg.tie_embeddings else jnp.einsum(
+        "bsd,dv->bsv", x, w.astype(x.dtype)
+    )

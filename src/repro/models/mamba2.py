@@ -1,0 +1,304 @@
+"""Mamba2 (SSD — state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD: the sequence is split into chunks of ``cfg.ssm_chunk``;
+intra-chunk terms use the quadratic (attention-like) form, inter-chunk
+terms propagate the (H, P, N) state with a linear scan over chunks.
+Decode is the O(1)-per-token recurrent update — this is why the SSM archs
+run ``long_500k`` natively.
+
+Projections are kept as separate tensors (wz/wx/wB/wC/wdt) so the logical
+sharding rules can put ``d_inner`` (and thus SSD heads) on the ``model``
+axis without splitting a fused in_proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding.rules import ParamSpec
+
+HEAD_P = 64  # SSD value-head dim
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = cfg.ssm_heads or d_inner // HEAD_P
+    return d_inner, heads, d_inner // heads, cfg.ssm_state
+
+
+def mamba_specs(cfg) -> dict:
+    d_inner, h, p, n = dims(cfg)
+    d = cfg.d_model
+    k = cfg.conv_kernel
+    return {
+        "wz": ParamSpec((d, d_inner), ("embed", "ssm_inner")),
+        "wx": ParamSpec((d, d_inner), ("embed", "ssm_inner")),
+        "wB": ParamSpec((d, n), ("embed", "ssm_state")),
+        "wC": ParamSpec((d, n), ("embed", "ssm_state")),
+        "wdt": ParamSpec((d, h), ("embed", "ssm_heads")),
+        "conv_x": ParamSpec((k, d_inner), ("conv", "ssm_inner"), init="small"),
+        "conv_B": ParamSpec((k, n), ("conv", "ssm_state"), init="small"),
+        "conv_C": ParamSpec((k, n), ("conv", "ssm_state"), init="small"),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "a_log": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "norm": ParamSpec((d_inner,), ("ssm_inner",), init="ones"),
+        "wo": ParamSpec((d_inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C).
+
+    If ``state`` (B,K-1,C) is given (decode), returns (y, new_state)."""
+    k = w.shape[0]
+    if state is not None:
+        xs = jnp.concatenate([state, x], axis=1)  # (B, K-1+S, C)
+        new_state = xs[:, -(k - 1) :, :] if k > 1 else jnp.zeros_like(state)
+    else:
+        xs = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_state = None
+    y = sum(xs[:, i : i + x.shape[1], :] * w[i][None, None] for i in range(k))
+    y = jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype)
+    return (y, new_state) if state is not None else y
+
+
+def _segsum(a):
+    """a: (..., Q) -> (..., Q, Q) with out[i,j] = sum_{j<k<=i} a_k (i>=j)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, a, b, c, chunk: int, initial_state=None):
+    """Chunked SSD scan (pure-jnp reference; the Pallas kernel mirrors this).
+
+    x: (B,S,H,P) discrete inputs (already dt-scaled); a: (B,S,H) log-decays
+    (dt * A, negative); b, c: (B,S,N).  Returns y: (B,S,H,P), final state
+    (B,H,P,N).  All internals f32.
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    xf = x.astype(jnp.float32).reshape(bsz, nc, q, h, p)
+    af = a.astype(jnp.float32).reshape(bsz, nc, q, h).transpose(0, 3, 1, 2)  # (B,H,nc,Q)
+    bf = b.astype(jnp.float32).reshape(bsz, nc, q, n)
+    cf = c.astype(jnp.float32).reshape(bsz, nc, q, n)
+
+    a_cum = jnp.cumsum(af, axis=-1)  # (B,H,nc,Q)
+    lmat = jnp.exp(_segsum(af))  # (B,H,nc,Q,Q)
+    # intra-chunk (diagonal blocks)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", cf, bf, lmat, xf)
+    # states emitted by each chunk
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (B,H,nc,Q)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", bf, decay_states, xf)
+    # inter-chunk linear scan
+    chunk_decay = jnp.exp(a_cum[..., -1])  # (B,H,nc)
+    init = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def scan_body(carry, xs):
+        st_c, dec_c = xs  # (B,H,P,N), (B,H)
+        prev = carry
+        new = prev * dec_c[..., None, None] + st_c
+        return new, prev
+
+    st_seq = states.transpose(1, 0, 2, 3, 4)  # (nc,B,H,P,N)
+    dec_seq = chunk_decay.transpose(2, 0, 1)  # (nc,B,H)
+    final, prevs = jax.lax.scan(scan_body, init, (st_seq, dec_seq))
+    prevs = prevs.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+    # inter-chunk contribution
+    state_decay_out = jnp.exp(a_cum)  # (B,H,nc,Q)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cf, prevs, state_decay_out)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final
+
+
+def ssd_decode_step(state, x, a, b, c):
+    """O(1) recurrent update. state: (B,H,P,N); x: (B,H,P); a: (B,H); b,c: (B,N)."""
+    dec = jnp.exp(a.astype(jnp.float32))[..., None, None]
+    upd = x.astype(jnp.float32)[..., None] * b.astype(jnp.float32)[:, None, None, :]
+    new = state * dec + upd
+    y = jnp.einsum("bhpn,bn->bhp", new, c.astype(jnp.float32))
+    return y.astype(x.dtype), new
+
+
+def mamba_block(p, cfg, x, conv_state=None, ssm_state=None, collect_cache=False):
+    """Full Mamba2 block. x: (B,S,d).
+
+    Training: states None -> returns (y, final_ssm_state).
+    Prefill (collect_cache): returns (y, conv_tails, final_ssm_state).
+    Decode (S==1): pass states -> returns (y, new_conv, new_ssm).
+    """
+    d_inner, h, pdim, n = dims(cfg)
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,di->bsi", x, p["wz"].astype(dt_))
+    xin = jnp.einsum("bsd,di->bsi", x, p["wx"].astype(dt_))
+    bin_ = jnp.einsum("bsd,dn->bsn", x, p["wB"].astype(dt_))
+    cin = jnp.einsum("bsd,dn->bsn", x, p["wC"].astype(dt_))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(dt_))
+
+    decode = conv_state is not None
+    if decode:
+        xin, cx = _causal_conv(xin, p["conv_x"].astype(dt_), conv_state["x"])
+        bin_, cb = _causal_conv(bin_, p["conv_B"].astype(dt_), conv_state["B"])
+        cin, cc = _causal_conv(cin, p["conv_C"].astype(dt_), conv_state["C"])
+        new_conv = {"x": cx, "B": cb, "C": cc}
+    else:
+        kk = p["conv_x"].shape[0]
+        if collect_cache:  # pre-conv tails become the decode conv state
+            new_conv = {
+                "x": xin[:, -(kk - 1) :, :],
+                "B": bin_[:, -(kk - 1) :, :],
+                "C": cin[:, -(kk - 1) :, :],
+            }
+        xin = _causal_conv(xin, p["conv_x"].astype(dt_))
+        bin_ = _causal_conv(bin_, p["conv_B"].astype(dt_))
+        cin = _causal_conv(cin, p["conv_C"].astype(dt_))
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,) negative decay rates
+    xh = xin.reshape(*xin.shape[:2], h, pdim)
+    x_disc = xh.astype(jnp.float32) * dt[..., None]
+    log_decay = dt * a  # (B,S,H)
+
+    if decode:
+        y1, new_ssm = ssd_decode_step(
+            ssm_state, x_disc[:, 0], log_decay[:, 0], bin_[:, 0], cin[:, 0]
+        )
+        y = y1[:, None]
+    elif jax.default_backend() == "tpu" and x_disc.shape[1] % cfg.ssm_chunk == 0:
+        # chunked SSD Pallas kernel (repro/kernels/ssd_scan.py)
+        from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
+
+        y, new_ssm = _ssd_kernel(
+            x_disc, log_decay, bin_, cin, chunk=cfg.ssm_chunk, interpret=False
+        )
+    else:
+        y, new_ssm = ssd_chunked(x_disc, log_decay, bin_, cin, cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(*xin.shape[:2], d_inner).astype(dt_)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["wo"].astype(dt_))
+    if decode:
+        return out, new_conv, new_ssm
+    if collect_cache:
+        return out, new_conv, new_ssm
+    return out, new_ssm
+
+
+# ---------------------------------------------------------------------------
+# Full model (attention-free LM)
+# ---------------------------------------------------------------------------
+
+
+def block_specs(cfg) -> dict:
+    return {
+        "ln": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "mamba": mamba_specs(cfg),
+    }
+
+
+def param_specs(cfg) -> dict:
+    from repro.models.transformer import stack_specs
+
+    return {
+        "embed": L.embed_specs(cfg),
+        "layers": stack_specs(block_specs(cfg), cfg.num_layers),
+        "ln_f": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "unembed": {
+            "w": ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), init="small")
+        },
+    }
+
+
+def forward(params, cfg, tokens, **_):
+    x = params["embed"]["tok"][tokens].astype(cfg.activation_dtype)
+
+    def body(carry, lp):
+        x = carry
+        h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, _ = mamba_block(lp["mamba"], cfg, h)
+        return x + y, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"]["w"].astype(x.dtype))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch):
+    logits, _ = forward(params, cfg, batch["tokens"])
+    return L.cross_entropy(logits, batch["labels"])
+
+
+def init_cache(cfg, batch: int, max_seq: int = 0):
+    """Recurrent cache: conv tails + SSD state per layer. O(1) in seq length."""
+    d_inner, h, p, n = dims(cfg)
+    k = cfg.conv_kernel
+    lcount = cfg.num_layers
+    dt = cfg.activation_dtype
+    return {
+        "conv_x": jnp.zeros((lcount, batch, k - 1, d_inner), dt),
+        "conv_B": jnp.zeros((lcount, batch, k - 1, n), dt),
+        "conv_C": jnp.zeros((lcount, batch, k - 1, n), dt),
+        "ssm": jnp.zeros((lcount, batch, h, p, n), jnp.float32),
+    }
+
+
+def cache_axes(cfg):
+    return {
+        "conv_x": ("layers", "batch", "conv", "ssm_inner"),
+        "conv_B": ("layers", "batch", "conv", "ssm_state"),
+        "conv_C": ("layers", "batch", "conv", "ssm_state"),
+        "ssm": ("layers", "batch", "ssm_heads", "head_dim", "ssm_state"),
+    }
+
+
+def prefill(params, cfg, tokens, **_):
+    """Run the prompt, return (last-token logits, recurrent cache)."""
+    x = params["embed"]["tok"][tokens].astype(cfg.activation_dtype)
+
+    def body(carry, lp):
+        x = carry
+        h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, conv, ssm = mamba_block(lp["mamba"], cfg, h, collect_cache=True)
+        return x + y, (conv["x"], conv["B"], conv["C"], ssm)
+
+    x, (cx, cb, cc, ssm) = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["unembed"]["w"].astype(x.dtype))
+    return logits, {"conv_x": cx, "conv_B": cb, "conv_C": cc, "ssm": ssm}
+
+
+def decode_step(params, cfg, cache, token, pos):
+    x = params["embed"]["tok"][token][:, None, :].astype(cfg.activation_dtype)
+
+    def body(carry, xs):
+        x = carry
+        lp, cx, cb, cc, ssm = xs
+        h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, new_conv, new_ssm = mamba_block(
+            lp["mamba"], cfg, h, conv_state={"x": cx, "B": cb, "C": cc}, ssm_state=ssm
+        )
+        return x + y, (new_conv["x"], new_conv["B"], new_conv["C"], new_ssm)
+
+    x, (cx, cb, cc, ssm) = jax.lax.scan(
+        body,
+        x,
+        (params["layers"], cache["conv_x"], cache["conv_B"], cache["conv_C"], cache["ssm"]),
+    )
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"]["w"].astype(x.dtype))[:, 0]
+    return logits, {"conv_x": cx, "conv_B": cb, "conv_C": cc, "ssm": ssm}

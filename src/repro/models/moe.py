@@ -1,0 +1,121 @@
+"""Mixture-of-Experts layer (GShard-style grouped capacity dispatch).
+
+Qwen-family MoE: optional shared experts (always-on dense path) + routed
+experts with top-k softmax gating.  Dispatch uses one-hot einsums over
+(group, token, expert, capacity) so GSPMD lowers the expert-parallel
+exchange to all-to-all style collectives; tokens are processed in groups of
+``GROUP`` to keep the dispatch tensors bounded.
+
+FLOPs scale with *activated* experts (capacity ~= tokens * top_k * cf), not
+with the full expert count — matching the MoE roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import ParamSpec
+
+GROUP = 512  # tokens per dispatch group
+
+
+def moe_specs(cfg) -> dict:
+    e, d, f = cfg.num_experts, cfg.d_model, (cfg.moe_d_ff or cfg.d_ff)
+    edt = "int8" if cfg.expert_dtype == "int8" else None
+    sp = {
+        "router": ParamSpec((d, e), ("embed", "experts"), init="small"),
+        "wi_gate": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp"), dtype=edt),
+        "wi_up": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp"), dtype=edt),
+        "wo": ParamSpec((e, f, d), ("experts", "expert_mlp", "embed"), dtype=edt),
+    }
+    if edt:
+        # per-expert dequantisation scales (applied to einsum OUTPUTS so the
+        # int8 weights never materialise in bf16)
+        for nm, fan in (("s_gate", d), ("s_up", d), ("s_down", f)):
+            sp[nm] = ParamSpec((e,), ("experts",), init="const",
+                               scale=(1.0 / fan) ** 0.5 / 48.0, dtype="float32")
+    if cfg.num_shared_experts:
+        fs = cfg.num_shared_experts * f
+        sp["shared"] = {
+            "wi_gate": ParamSpec((d, fs), ("embed", "mlp")),
+            "wi_up": ParamSpec((d, fs), ("embed", "mlp")),
+            "wo": ParamSpec((fs, d), ("mlp", "embed")),
+            "gate": ParamSpec((d, 1), ("embed", None), init="small"),
+        }
+    return sp
+
+
+def _capacity(tokens_per_group: int, cfg) -> int:
+    c = int(tokens_per_group * cfg.num_experts_per_tok * cfg.capacity_factor / cfg.num_experts)
+    return max(c, 1)
+
+
+def route(logits, cfg):
+    """Top-k routing. logits: (..., E). Returns (weights, mask) of (..., E)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topv, topi = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    mask = jax.nn.one_hot(topi, cfg.num_experts, dtype=jnp.float32).sum(-2)  # (...,E)
+    weights = probs * mask
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, mask
+
+
+def load_balance_loss(probs_mean, dispatch_frac, num_experts: int):
+    """Switch/GShard auxiliary loss: E * sum_e f_e * P_e."""
+    return num_experts * jnp.sum(probs_mean * dispatch_frac)
+
+
+def moe_apply(p, cfg, x):
+    """x: (B, S, d) -> (B, S, d), aux_loss (scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    g = max(min(GROUP, t), 1)
+    if t % g:  # pad tokens to a whole number of groups
+        pad = g - t % g
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    ng = xt.shape[0] // g
+    xg = xt.reshape(ng, g, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(xg.dtype))
+    weights, mask = route(logits, cfg)  # (ng,g,E) f32
+
+    cap = _capacity(g, cfg)
+    # position of each token within its expert's buffer
+    pos_in_exp = (jnp.cumsum(mask, axis=1) - 1.0) * mask  # (ng,g,E)
+    keep = (pos_in_exp < cap).astype(jnp.float32) * mask
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    aux = load_balance_loss(
+        probs.mean(axis=(0, 1)), mask.mean(axis=(0, 1)), cfg.num_experts
+    )
+
+    pos_oh = jax.nn.one_hot(pos_in_exp.astype(jnp.int32), cap, dtype=jnp.float32)
+    dispatch = keep[..., None] * pos_oh  # (ng,g,E,C)
+    combine = (weights * keep)[..., None] * pos_oh  # (ng,g,E,C)
+
+    dt = x.dtype
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(dt), xg)  # (ng,E,C,d)
+    gate = jnp.einsum("gecd,edf->gecf", xe, p["wi_gate"].astype(dt))
+    up = jnp.einsum("gecd,edf->gecf", xe, p["wi_up"].astype(dt))
+    if cfg.expert_dtype == "int8":
+        gate = gate * p["s_gate"][None, :, None, None].astype(dt)
+        up = up * p["s_up"][None, :, None, None].astype(dt)
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(dt) * up
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dt))
+    if cfg.expert_dtype == "int8":
+        ye = ye * p["s_down"][None, :, None, None].astype(dt)
+    yg = jnp.einsum("gtec,gecd->gtd", combine.astype(dt), ye)  # (ng,g,d)
+
+    y = yg.reshape(-1, d)[:t].reshape(b, s, d)
+
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        gsh = jnp.einsum("bsd,df->bsf", x, sp["wi_gate"].astype(dt))
+        ush = jnp.einsum("bsd,df->bsf", x, sp["wi_up"].astype(dt))
+        hsh = jax.nn.silu(gsh.astype(jnp.float32)).astype(dt) * ush
+        ysh = jnp.einsum("bsf,fd->bsd", hsh, sp["wo"].astype(dt))
+        sgate = jax.nn.sigmoid(
+            jnp.einsum("bsd,dk->bsk", x, sp["gate"].astype(dt)).astype(jnp.float32)
+        ).astype(dt)
+        y = y + sgate * ysh
+    return y, aux

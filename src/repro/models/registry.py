@@ -1,0 +1,195 @@
+"""Model registry: one uniform interface over all architecture families.
+
+``build_model(cfg)`` returns a ``Model`` whose functions close over nothing —
+params/caches are explicit pytrees — so they can be jitted, pjit-sharded, or
+vmapped over federated clients by the AFL core.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.sharding.rules import ParamSpec, axes_tree, init_params
+
+
+@dataclasses.dataclass(eq=False)  # identity hash: usable as a jit static arg
+class Model:
+    cfg: ModelConfig
+    specs: dict
+    loss_fn: Callable  # (params, cfg, batch) -> scalar loss
+    forward: Callable
+    decode_step: Optional[Callable] = None  # (params, cfg, cache, token, pos)
+    prefill: Optional[Callable] = None
+    init_cache: Optional[Callable] = None  # (cfg, batch, max_seq) -> cache
+    cache_axes: Optional[Callable] = None  # (cfg) -> logical dims tree
+    encode: Optional[Callable] = None  # enc-dec only
+
+    def init(self, rng, dtype=None):
+        return init_params(self.specs, rng, jnp.dtype(self.cfg.param_dtype))
+
+    def param_axes(self):
+        return axes_tree(self.specs)
+
+    def num_params(self) -> int:
+        leaves = jax.tree.leaves(
+            self.specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+        )
+        return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def _transformer_cache_axes(cfg):
+    ax = {
+        "k": ("layers", "batch", "seq", "kv_heads", "head_dim"),
+        "v": ("layers", "batch", "seq", "kv_heads", "head_dim"),
+        "pos": ("batch", "seq"),
+        "length": (),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        ax["k_scale"] = ("layers", "batch", "seq", "kv_heads")
+        ax["v_scale"] = ("layers", "batch", "seq", "kv_heads")
+    return ax
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        from repro.models import transformer as T
+
+        return Model(
+            cfg, T.param_specs(cfg), T.loss_fn, T.forward,
+            decode_step=T.decode_step, prefill=T.prefill,
+            init_cache=T.init_cache,
+            cache_axes=_transformer_cache_axes,
+        )
+    if fam == "vlm":
+        from repro.models import transformer as T
+        from repro.models import vlm as V
+
+        return Model(
+            cfg, V.param_specs(cfg), V.loss_fn, V.forward,
+            decode_step=V.decode_step, prefill=V.prefill,
+            init_cache=V.init_cache,
+            cache_axes=_transformer_cache_axes,
+        )
+    if fam == "ssm":
+        from repro.models import mamba2 as M
+
+        return Model(
+            cfg, M.param_specs(cfg), M.loss_fn, M.forward,
+            decode_step=M.decode_step, prefill=M.prefill,
+            init_cache=M.init_cache, cache_axes=M.cache_axes,
+        )
+    if fam == "hybrid":
+        from repro.models import hybrid as H
+
+        return Model(
+            cfg, H.param_specs(cfg), H.loss_fn, H.forward,
+            decode_step=H.decode_step, prefill=H.prefill,
+            init_cache=H.init_cache, cache_axes=H.cache_axes,
+        )
+    if fam == "audio":
+        from repro.models import encdec as E
+
+        return Model(
+            cfg, E.param_specs(cfg), E.loss_fn, E.forward,
+            decode_step=E.decode_step, prefill=E.prefill,
+            init_cache=E.init_cache, cache_axes=E.cache_axes, encode=E.encode,
+        )
+    if fam == "vision":
+        from repro.models import resnet as R
+
+        return Model(cfg, R.param_specs(cfg), R.loss_fn, R.forward)
+    if fam == "trajectory":
+        from repro.models import lanegcn as G
+
+        return Model(cfg, G.param_specs(cfg), G.loss_fn, G.forward)
+    raise ValueError(f"unknown family {fam!r}")
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs + logical dims) per (arch, input shape)
+# ---------------------------------------------------------------------------
+
+N_IMG_PATCHES = 256  # stub vision patches for VLM train/prefill
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """Returns (tree of ShapeDtypeStruct, tree of logical dims) for the step
+    inputs (excluding params and caches)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def sds(shp, dt=i32):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            n_img = min(N_IMG_PATCHES, s // 2)
+            n_txt = s - n_img
+            tree = {
+                "tokens": sds((b, n_txt)),
+                "labels": sds((b, n_txt)),
+                "vision_embeds": sds((b, n_img, cfg.d_model), jnp.bfloat16),
+            }
+            dims = {
+                "tokens": ("batch", "seq"),
+                "labels": ("batch", "seq"),
+                "vision_embeds": ("batch", "seq", "embed"),
+            }
+        elif cfg.family == "audio":
+            tree = {
+                "tokens": sds((b, s)),
+                "labels": sds((b, s)),
+                "frames": sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16),
+            }
+            dims = {
+                "tokens": ("batch", "seq"),
+                "labels": ("batch", "seq"),
+                "frames": ("batch", "pos", "embed"),
+            }
+        else:
+            tree = {"tokens": sds((b, s)), "labels": sds((b, s))}
+            dims = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        if shape.kind == "prefill":
+            tree.pop("labels")
+            dims.pop("labels")
+        return tree, dims
+
+    # decode: one new token against a seq_len-deep cache
+    tree = {"token": sds((b,)), "pos": sds(())}
+    dims = {"token": ("batch",), "pos": ()}
+    return tree, dims
+
+
+def demo_batch(cfg: ModelConfig, batch: int, seq: int, rng: np.random.Generator):
+    """Concrete small arrays for smoke tests (reduced configs)."""
+    if cfg.family == "vision":
+        return {
+            "images": rng.normal(0, 1, (batch, 32, 32, 3)).astype(np.float32),
+            "labels": rng.integers(0, cfg.vocab_size, batch).astype(np.int32),
+        }
+    if cfg.family == "trajectory":
+        return {
+            "past": rng.normal(0, 1, (batch, 20, 2)).astype(np.float32),
+            "lanes": rng.normal(0, 1, (batch, 32, 2)).astype(np.float32),
+            "future": rng.normal(0, 1, (batch, 30, 2)).astype(np.float32),
+        }
+    out = {
+        "tokens": rng.integers(0, cfg.vocab_size, (batch, seq)).astype(np.int32),
+        "labels": rng.integers(0, cfg.vocab_size, (batch, seq)).astype(np.int32),
+    }
+    if cfg.family == "vlm":
+        n_img = 16
+        out["vision_embeds"] = rng.normal(0, 0.02, (batch, n_img, cfg.d_model)).astype(
+            np.float32
+        )
+    if cfg.family == "audio":
+        out["frames"] = rng.normal(0, 0.02, (batch, cfg.encoder_seq, cfg.d_model)).astype(
+            np.float32
+        )
+    return out

@@ -1,0 +1,84 @@
+"""ResNet-9 for CIFAR-10 — the paper's own image model (§VI, 6.57M params).
+
+conv(3->w) / conv(w->2w)+pool / residual(2w) / conv(2w->4w)+pool /
+conv(4w->8w)+pool / residual(8w) / global-max-pool / FC.
+BatchNorm uses in-batch statistics in both train and eval (no running
+stats) — standard practice in non-iid FL where per-device running stats
+diverge; noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import ParamSpec
+
+
+def _conv_bn_specs(cin, cout):
+    return {
+        "w": ParamSpec((3, 3, cin, cout), (None, None, None, "mlp")),
+        "scale": ParamSpec((cout,), ("mlp",), init="ones"),
+        "bias": ParamSpec((cout,), ("mlp",), init="zeros"),
+    }
+
+
+def param_specs(cfg) -> dict:
+    w = cfg.d_model  # base width (64)
+    return {
+        "c1": _conv_bn_specs(3, w),
+        "c2": _conv_bn_specs(w, 2 * w),
+        "r1a": _conv_bn_specs(2 * w, 2 * w),
+        "r1b": _conv_bn_specs(2 * w, 2 * w),
+        "c3": _conv_bn_specs(2 * w, 4 * w),
+        "c4": _conv_bn_specs(4 * w, 8 * w),
+        "r2a": _conv_bn_specs(8 * w, 8 * w),
+        "r2b": _conv_bn_specs(8 * w, 8 * w),
+        "fc": {
+            "w": ParamSpec((8 * w, cfg.vocab_size), ("mlp", None), init="small"),
+            "b": ParamSpec((cfg.vocab_size,), (None,), init="zeros"),
+        },
+    }
+
+
+def _conv_bn(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype),
+        window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    mu = jnp.mean(y, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(y, axis=(0, 1, 2), keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = y * p["scale"] + p["bias"]
+    return jax.nn.relu(y)
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(params, cfg, images, **_):
+    """images: (B, 32, 32, 3) float32 -> logits (B, classes)."""
+    x = images.astype(jnp.float32)
+    x = _conv_bn(params["c1"], x)
+    x = _pool(_conv_bn(params["c2"], x))
+    x = x + _conv_bn(params["r1b"], _conv_bn(params["r1a"], x))
+    x = _pool(_conv_bn(params["c3"], x))
+    x = _pool(_conv_bn(params["c4"], x))
+    x = x + _conv_bn(params["r2b"], _conv_bn(params["r2a"], x))
+    x = jnp.max(x, axis=(1, 2))  # global max pool
+    return x @ params["fc"]["w"] + params["fc"]["b"], jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, cfg, batch):
+    logits, _ = forward(params, cfg, batch["images"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    return -jnp.mean(ll)
+
+
+def accuracy(params, cfg, batch):
+    logits, _ = forward(params, cfg, batch["images"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))

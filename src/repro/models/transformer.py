@@ -1,0 +1,281 @@
+"""Decoder-only transformer LM (dense / MoE / VLM backbone).
+
+Layers are stacked on a leading ``layers`` axis and executed with
+``lax.scan`` so HLO size (and CPU compile time at 512-way GSPMD) stays
+bounded for 80-layer configs.  Covers:
+
+* dense GQA blocks (llama3 / internlm2 / qwen2 / qwen3 signatures:
+  qkv-bias, qk-norm, GQA, tied embeddings),
+* MoE blocks (shared + routed experts, top-k routing, capacity dispatch) —
+  see ``repro/models/moe.py``,
+* the Qwen2-VL language backbone: M-RoPE position streams and an embedding
+  injection path for the (stubbed) vision frontend.
+
+Decode supports a plain KV cache (``decode_32k``) and a ring-buffer
+sliding-window cache which bounds state for ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.sharding.rules import ParamSpec
+
+
+def stack_specs(specs, n: int, axis_name: str = "layers"):
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.dims, s.init, s.scale, s.dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def block_specs(cfg) -> dict:
+    sp = {
+        "ln_attn": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "ln_mlp": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "attn": L.attn_specs(cfg),
+    }
+    if cfg.is_moe:
+        sp["moe"] = MOE.moe_specs(cfg)
+    else:
+        sp["mlp"] = L.mlp_specs(cfg)
+    return sp
+
+
+def param_specs(cfg) -> dict:
+    sp = {
+        "embed": L.embed_specs(cfg),
+        "layers": stack_specs(block_specs(cfg), cfg.num_layers),
+        "ln_f": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        sp["unembed"] = {
+            "w": ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), init="small")
+        }
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block(cfg, p, x, cos, sin, sliding_window: int):
+    h = L.rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    q, k, v = L.attn_qkv(p["attn"], cfg, h)
+    q, k = L.apply_rope(q, k, cos, sin)
+    attn = L.causal_attention(q, k, v, sliding_window=sliding_window)
+    x = x + L.attn_out(p["attn"], attn, x.dtype)
+    h = L.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if cfg.is_moe:
+        y, aux = MOE.moe_apply(p["moe"], cfg, h)
+    else:
+        y, aux = L.mlp_apply(p["mlp"], h), jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def forward(params, cfg, tokens=None, *, embeds=None, positions=None, collect_kv=False):
+    """Returns (logits, aux_loss) — and the KV cache too if ``collect_kv``.
+
+    ``embeds`` (B,S,d) overrides token embedding (VLM/audio stub injection).
+    ``positions``: (B,S) or (3,B,S) for M-RoPE; defaults to arange.
+    """
+    if embeds is None:
+        emb = params["embed"]["tok"]
+        x = emb[tokens].astype(cfg.activation_dtype)
+    else:
+        x = embeds.astype(cfg.activation_dtype)
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    if positions is None:
+        positions = (
+            L.text_mrope_positions(b, s)
+            if cfg.mrope_sections
+            else jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        )
+    cos, sin = L.rope_cos_sin(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+
+    def body(carry, lp):
+        x, aux = carry
+        h = L.rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp["attn"], cfg, h)
+        q, k = L.apply_rope(q, k, cos, sin)
+        attn = L.causal_attention(q, k, v, sliding_window=cfg.sliding_window)
+        x = x + L.attn_out(lp["attn"], attn, x.dtype)
+        h2 = L.rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, a = MOE.moe_apply(lp["moe"], cfg, h2)
+        else:
+            y, a = L.mlp_apply(lp["mlp"], h2), jnp.zeros((), jnp.float32)
+        ys = (k, v) if collect_kv else None
+        return (x + y, aux + a), ys
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    (x, aux), kvs = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.unembed(params, cfg, x)
+    if collect_kv:
+        return logits, aux, kvs
+    return logits, aux
+
+
+def loss_fn(params, cfg, batch):
+    """Mean next-token cross-entropy + MoE aux. batch: tokens/labels (B,S)."""
+    logits, aux = forward(params, cfg, batch["tokens"])
+    return L.cross_entropy(logits, batch["labels"]) + cfg.router_aux_loss * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg, batch: int, max_seq: int) -> dict:
+    """ShapeDtypeStructs + logical dims for the KV cache."""
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, hd)
+    dims = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    dt = cfg.activation_dtype
+    specs = {
+        "k": ParamSpec(shape, dims, init="zeros", dtype=str(dt)),
+        "v": ParamSpec(shape, dims, init="zeros", dtype=str(dt)),
+        "pos": ParamSpec((batch, max_seq), ("batch", "seq"), init="zeros", dtype="int32"),
+        "length": ParamSpec((), (), init="zeros", dtype="int32"),
+    }
+    return specs
+
+
+def init_cache(cfg, batch: int, max_seq: int):
+    hd = cfg.resolved_head_dim
+    dt = cfg.activation_dtype
+    shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, hd)
+    cache = {
+        "pos": jnp.full((batch, max_seq), -1, jnp.int32),
+        "length": jnp.zeros((), jnp.int32),
+    }
+    if cfg.kv_cache_dtype == "int8":
+        cache["k"] = jnp.zeros(shape, jnp.int8)
+        cache["v"] = jnp.zeros(shape, jnp.int8)
+        sshape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads)
+        cache["k_scale"] = jnp.zeros(sshape, jnp.float32)
+        cache["v_scale"] = jnp.zeros(sshape, jnp.float32)
+    else:
+        cache["k"] = jnp.zeros(shape, dt)
+        cache["v"] = jnp.zeros(shape, dt)
+    return cache
+
+
+def prefill(params, cfg, tokens, *, embeds=None, positions=None, max_seq: Optional[int] = None):
+    """Run the prompt, return (last-token logits, filled cache)."""
+    logits, aux, (ks, vs) = forward(
+        params, cfg, tokens, embeds=embeds, positions=positions, collect_kv=True
+    )
+    b, s = (tokens.shape if embeds is None else embeds.shape[:2])
+    max_seq = max_seq or s
+    k = ks
+    v = vs
+    pos = jnp.where(
+        jnp.arange(max_seq)[None] < s, jnp.arange(max_seq)[None], -1
+    ) * jnp.ones((b, 1), jnp.int32)
+    cache = {"pos": pos, "length": jnp.asarray(s, jnp.int32)}
+    padw = ((0, 0), (0, 0), (0, max_seq - s), (0, 0), (0, 0))
+    if cfg.kv_cache_dtype == "int8":
+        kq, ksc = jax.vmap(L.quantize_kv)(k)
+        vq, vsc = jax.vmap(L.quantize_kv)(v)
+        pads = ((0, 0), (0, 0), (0, max_seq - s), (0, 0))
+        cache.update(
+            k=jnp.pad(kq, padw), v=jnp.pad(vq, padw),
+            k_scale=jnp.pad(ksc, pads), v_scale=jnp.pad(vsc, pads),
+        )
+    else:
+        if max_seq > s:
+            k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+        cache.update(k=k, v=v)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg, cache, token, pos):
+    """One decode step. token: (B,) int32; pos: scalar int32 (abs position).
+
+    With ``cfg.sliding_window > 0`` the cache is a ring buffer of
+    ``window`` slots (cache seq dim == window) — O(window) per token.
+    """
+    emb = params["embed"]["tok"]
+    x = emb[token][:, None, :].astype(cfg.activation_dtype)  # (B,1,d)
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    window = cfg.sliding_window
+    s_cache = cache["k"].shape[2]
+    slot = jnp.where(window > 0, pos % jnp.maximum(s_cache, 1), pos).astype(jnp.int32)
+
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None], (b, 1))
+    if cfg.mrope_sections:
+        p3 = jnp.broadcast_to(posb[None], (3, b, 1))
+        cos, sin = L.rope_cos_sin(p3, hd, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        cos, sin = L.rope_cos_sin(posb, hd, cfg.rope_theta)
+
+    new_pos = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b, 1)), (0, slot)
+    )
+
+    quant = cfg.kv_cache_dtype == "int8"
+    wpos = new_pos if window > 0 else None
+    length = jnp.minimum(pos + 1, s_cache)
+
+    def body(carry, xs):
+        x, aux = carry
+        if quant:
+            lp, kc, vc, ksc, vsc = xs
+        else:
+            lp, kc, vc = xs
+        h = L.rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp["attn"], cfg, h)
+        q, k = L.apply_rope(q, k, cos, sin)
+        if quant:
+            kq, ks_ = L.quantize_kv(k)
+            vq, vs_ = L.quantize_kv(v)
+            kc = jax.lax.dynamic_update_slice(kc, kq, (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, vq, (0, slot, 0, 0))
+            ksc = jax.lax.dynamic_update_slice(ksc, ks_, (0, slot, 0))
+            vsc = jax.lax.dynamic_update_slice(vsc, vs_, (0, slot, 0))
+            attn = L.decode_attention_q(
+                q[:, 0], kc, vc, ksc, vsc, length, window_pos=wpos
+            )
+        else:
+            kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, slot, 0, 0))
+            attn = L.decode_attention(q[:, 0], kc, vc, length, window_pos=wpos)
+        x = x + L.attn_out(lp["attn"], attn[:, None], x.dtype)
+        h2 = L.rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, a = MOE.moe_apply(lp["moe"], cfg, h2)
+        else:
+            y, a = L.mlp_apply(lp["mlp"], h2), jnp.zeros((), jnp.float32)
+        ys = (kc, vc, ksc, vsc) if quant else (kc, vc)
+        return (x + y, aux + a), ys
+
+    if quant:
+        xs_in = (params["layers"], cache["k"], cache["v"],
+                 cache["k_scale"], cache["v_scale"])
+    else:
+        xs_in = (params["layers"], cache["k"], cache["v"])
+    (x, _), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs_in)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.unembed(params, cfg, x)[:, 0]
+    new_cache = {"pos": new_pos, "length": length}
+    if quant:
+        new_cache.update(k=ys[0], v=ys[1], k_scale=ys[2], v_scale=ys[3])
+    else:
+        new_cache.update(k=ys[0], v=ys[1])
+    return logits, new_cache

@@ -1,0 +1,57 @@
+"""Qwen2-VL language backbone [arXiv:2409.12191].
+
+Per the assignment carve-out, the ViT/merger vision frontend is a STUB:
+``vision_embeds`` (B, n_img, d_model) arrive precomputed, and are spliced in
+front of the text-token embeddings.  M-RoPE 3D positions: image patches get
+(t=0, h=row, w=col); text tokens continue temporally after the image with
+h == w == t (dynamic-resolution details reduce to the provided grid).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+param_specs = T.param_specs
+init_cache = T.init_cache
+decode_step = T.decode_step
+prefill = T.prefill
+
+
+def mrope_positions(batch: int, n_img: int, n_text: int, grid: int):
+    """(3, B, n_img + n_text) position ids for an image-then-text stream."""
+    rows = jnp.arange(n_img) // max(grid, 1)
+    cols = jnp.arange(n_img) % max(grid, 1)
+    t_img = jnp.zeros(n_img, jnp.int32)
+    start = (max(grid, 1) if n_img else 0)
+    t_text = start + jnp.arange(n_text)
+    t = jnp.concatenate([t_img, t_text])
+    h = jnp.concatenate([rows, t_text])
+    w = jnp.concatenate([cols, t_text])
+    pos = jnp.stack([t, h, w]).astype(jnp.int32)  # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, n_img + n_text))
+
+
+def forward(params, cfg, tokens, *, vision_embeds=None, positions=None, **kw):
+    if vision_embeds is not None:
+        emb = params["embed"]["tok"]
+        text = emb[tokens].astype(cfg.activation_dtype)
+        x = jnp.concatenate([vision_embeds.astype(cfg.activation_dtype), text], axis=1)
+        b, n_img = vision_embeds.shape[:2]
+        grid = int(max(n_img, 1) ** 0.5) or 1
+        if positions is None:
+            positions = mrope_positions(b, n_img, tokens.shape[1], grid)
+        return T.forward(params, cfg, embeds=x, positions=positions, **kw)
+    return T.forward(params, cfg, tokens, positions=positions, **kw)
+
+
+def loss_fn(params, cfg, batch):
+    """Cross-entropy on the text positions only (vision positions unlabeled)."""
+    from repro.models import layers as L
+
+    logits, aux = forward(
+        params, cfg, batch["tokens"], vision_embeds=batch.get("vision_embeds")
+    )
+    n_img = batch["vision_embeds"].shape[1] if "vision_embeds" in batch else 0
+    text_logits = logits[:, n_img:]
+    return L.cross_entropy(text_logits, batch["labels"]) + cfg.router_aux_loss * aux

@@ -1,0 +1,26 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_decay(peak: float, decay_steps: int, floor: float = 0.0):
+    def fn(step):
+        t = jnp.clip(step / max(decay_steps, 1), 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+
+    return fn
+
+
+def warmup_cosine(peak: float, warmup_steps: int, decay_steps: int, floor: float = 0.0):
+    cos = cosine_decay(peak, max(decay_steps - warmup_steps, 1), floor)
+
+    def fn(step):
+        warm = peak * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn

@@ -1,0 +1,21 @@
+from repro.sharding.rules import (
+    RULES_SERVE,
+    RULES_TRAIN,
+    ParamSpec,
+    axes_tree,
+    init_params,
+    logical_to_pspec,
+    pspec_tree,
+    sharding_tree,
+)
+
+__all__ = [
+    "RULES_SERVE",
+    "RULES_TRAIN",
+    "ParamSpec",
+    "axes_tree",
+    "init_params",
+    "logical_to_pspec",
+    "pspec_tree",
+    "sharding_tree",
+]

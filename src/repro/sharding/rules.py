@@ -1,0 +1,189 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Models annotate every parameter dimension with a *logical* axis name
+(``embed``, ``heads``, ``mlp``, ``vocab``, ``experts``, ...).  Rule tables map
+logical names to an ordered list of candidate mesh axes; the first candidate
+that (a) exists in the mesh, (b) divides the dimension size, and (c) is not
+already used by another dimension of the same tensor wins.  Dimensions with
+no viable candidate stay unsharded.  This absorbs awkward arity (28 heads,
+60 experts, kv_heads < model-parallelism) without per-arch special cases —
+e.g. qwen2-7b's 4 kv heads fall back to sharding ``head_dim`` instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Ordered candidates per logical axis. Tuples may name several mesh axes
+# (sharded over their product). ``None`` = explicitly unsharded.
+Rules = Mapping[str, Sequence[Optional[Tuple[str, ...]]]]
+
+# --- Training (AFL distributed mode): ``data`` is the CLIENT axis ----------
+RULES_TRAIN: Rules = {
+    "client": [("data",)],
+    "batch": [("pod", "data"), ("data",)],
+    "layers": [None],
+    "vocab": [("model",)],
+    "embed": [None],
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "head_dim": [("model",)],
+    "mlp": [("model",)],
+    "experts": [("model",)],
+    "expert_mlp": [("model",)],
+    "ssm_heads": [("model",)],
+    "ssm_state": [None],
+    "ssm_inner": [("model",)],
+    "conv": [None],
+    "seq": [None],
+    "pos": [None],
+}
+
+# --- Serving (prefill/decode): ``data`` shards batch (or cache sequence) ---
+RULES_SERVE: Rules = {
+    "client": [None],
+    "batch": [("pod", "data"), ("data",), None],
+    "layers": [None],
+    "vocab": [("model",)],
+    "embed": [None],
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "head_dim": [("model",)],
+    "mlp": [("model",)],
+    "experts": [("model",)],
+    "expert_mlp": [("model",)],
+    "ssm_heads": [("model",)],
+    "ssm_state": [None],
+    "ssm_inner": [("model",)],
+    "conv": [None],
+    "seq": [("data",), None],  # long-context KV cache: sequence-parallel
+    "pos": [None],
+}
+
+
+def logical_to_pspec(
+    dims: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    rules: Rules,
+    mesh: Mesh,
+) -> P:
+    """Resolve one tensor's logical dims to a PartitionSpec."""
+    assert len(dims) == len(shape), (dims, shape)
+    used: set = set()
+    out = []
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for name, size in zip(dims, shape):
+        chosen = None
+        for cand in rules.get(name or "", [None]):
+            if cand is None:
+                break
+            if not all(a in axis_sizes for a in cand):
+                continue
+            if any(a in used for a in cand):
+                continue
+            prod = 1
+            for a in cand:
+                prod *= axis_sizes[a]
+            if prod == 0 or size % prod != 0:
+                continue
+            chosen = cand
+            break
+        if chosen is None:
+            out.append(None)
+        else:
+            used.update(chosen)
+            out.append(chosen[0] if len(chosen) == 1 else chosen)
+    # drop trailing Nones for tidiness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs: declarative model parameters with logical axes.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dims: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | embed | small
+    scale: float = 1.0
+    dtype: Optional[str] = None  # override param dtype
+
+
+def _init_leaf(key, spec: ParamSpec, dtype) -> jax.Array:
+    dt = jnp.dtype(spec.dtype) if spec.dtype else dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "const":
+        return jnp.full(spec.shape, spec.scale, dt)
+    if dt == jnp.int8:  # quantized weights: ints in [-127, 127]
+        vals = jax.random.normal(key, spec.shape, jnp.float32) * 48.0
+        return jnp.clip(jnp.round(vals), -127, 127).astype(jnp.int8)
+    fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+    if spec.init == "embed":
+        std = 1.0
+    elif spec.init == "small":
+        std = 0.02
+    else:
+        std = (1.0 / max(fan_in, 1)) ** 0.5
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std * spec.scale).astype(dt)
+
+
+def init_params(specs, rng, dtype=jnp.bfloat16):
+    """Initialise a (nested dict) tree of ParamSpec into arrays."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(rng, max(len(leaves), 1))
+    arrs = [_init_leaf(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def axes_tree(specs):
+    """Extract the logical-dims pytree from a spec tree."""
+    return jax.tree.map(
+        lambda s: s.dims, specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def shapes_tree(specs):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype) if s.dtype else jnp.bfloat16),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def pspec_tree(axes, shapes, rules: Rules, mesh: Mesh):
+    """Map a logical-dims tree + matching shape tree to PartitionSpecs."""
+    return jax.tree.map(
+        lambda d, s: logical_to_pspec(tuple(d), tuple(s.shape), rules, mesh),
+        axes,
+        shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, (str, type(None))) for i in x),
+    )
+
+
+def sharding_tree(axes, shapes, rules: Rules, mesh: Mesh):
+    ps = pspec_tree(axes, shapes, rules, mesh)
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p),
+        ps,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def prepend_axis(axes, name: str):
+    """Prepend a logical axis (e.g. ``client`` or ``layers``) to every leaf."""
+    return jax.tree.map(
+        lambda d: (name,) + tuple(d),
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, (str, type(None))) for i in x),
+    )

@@ -1,0 +1,28 @@
+"""Shared utilities: pytree math, bit accounting, logging, rng streams."""
+from repro.utils.tree import (
+    tree_add,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+    tree_norm,
+    tree_dot,
+    global_norm,
+    tree_size,
+    flatten_concat,
+    unflatten_like,
+)
+from repro.utils.logging import get_logger
+
+__all__ = [
+    "tree_add",
+    "tree_scale",
+    "tree_sub",
+    "tree_zeros_like",
+    "tree_norm",
+    "tree_dot",
+    "global_norm",
+    "tree_size",
+    "flatten_concat",
+    "unflatten_like",
+    "get_logger",
+]

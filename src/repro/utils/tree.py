@@ -1,0 +1,73 @@
+"""Pytree arithmetic helpers used across the AFL core.
+
+Every federated-state object (cumulative gradients g_n, error memory e_n,
+client models w_n) is a pytree with the same structure as the model params;
+these helpers implement the vector-space operations of Algorithm 1 without
+materialising flattened copies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return sum(jax.tree.leaves(leaves))
+
+
+def tree_norm(a):
+    """Squared L2 norm of a pytree (the paper's ||x_n||^2)."""
+    leaves = jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), a)
+    return sum(jax.tree.leaves(leaves))
+
+
+def global_norm(a):
+    return jnp.sqrt(tree_norm(a))
+
+
+def tree_size(a) -> int:
+    """Total number of scalar parameters s (static)."""
+    return sum(int(x.size) for x in jax.tree.leaves(a))
+
+
+def flatten_concat(a):
+    """Concatenate all leaves into a single flat vector (simulation mode)."""
+    leaves = jax.tree.leaves(a)
+    return jnp.concatenate([jnp.ravel(x) for x in leaves]) if leaves else jnp.zeros((0,))
+
+
+def unflatten_like(vec, ref):
+    """Inverse of flatten_concat given a reference pytree."""
+    leaves, treedef = jax.tree.flatten(ref)
+    out, off = [], 0
+    for leaf in leaves:
+        n = leaf.size
+        out.append(jnp.reshape(vec[off : off + n], leaf.shape).astype(leaf.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)

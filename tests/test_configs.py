@@ -1,0 +1,77 @@
+"""Assigned-architecture configs match the assignment table exactly."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, list_configs
+
+EXPECT = {
+    # name: (family, L, d_model, H, kv, d_ff, vocab)
+    "qwen2-vl-72b": ("vlm", 80, 8192, 64, 8, 29568, 152064),
+    "llama3.2-3b": ("dense", 28, 3072, 24, 8, 8192, 128256),
+    "internlm2-1.8b": ("dense", 24, 2048, 16, 8, 8192, 92544),
+    "qwen2-7b": ("dense", 28, 3584, 28, 4, 18944, 152064),
+    "qwen3-32b": ("dense", 64, 5120, 64, 8, 25600, 151936),
+    "mamba2-2.7b": ("ssm", 64, 2560, 0, 0, 0, 50280),
+    "whisper-large-v3": ("audio", 32, 1280, 20, 20, 5120, 51866),
+    "qwen2-moe-a2.7b": ("moe", 24, 2048, 16, 16, 1408, 151936),
+    "zamba2-7b": ("hybrid", 81, 3584, 32, 32, 14336, 32000),
+    "qwen3-moe-30b-a3b": ("moe", 48, 2048, 32, 4, 768, 151936),
+}
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_assigned_config_values(name):
+    cfg = get_config(name)
+    fam, nl, dm, h, kv, ff, v = EXPECT[name]
+    assert cfg.family == fam
+    assert cfg.num_layers == nl
+    assert cfg.d_model == dm
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+
+
+def test_signature_features():
+    assert get_config("qwen2-7b").qkv_bias
+    assert get_config("qwen3-32b").qk_norm
+    assert get_config("qwen2-vl-72b").mrope_sections == (16, 24, 24)
+    assert sum(get_config("qwen2-vl-72b").mrope_sections) == 64  # head_dim/2
+    assert get_config("mamba2-2.7b").ssm_state == 128
+    assert get_config("zamba2-7b").ssm_state == 64
+    assert get_config("zamba2-7b").attn_every == 6
+    q2moe = get_config("qwen2-moe-a2.7b")
+    assert (q2moe.num_experts, q2moe.num_experts_per_tok, q2moe.num_shared_experts) == (60, 4, 4)
+    q3moe = get_config("qwen3-moe-30b-a3b")
+    assert (q3moe.num_experts, q3moe.num_experts_per_tok) == (128, 8)
+    assert q3moe.qk_norm
+    assert get_config("llama3.2-3b").tie_embeddings
+
+
+def test_paper_models_registered():
+    names = list_configs()
+    assert "resnet9-cifar10" in names
+    assert "lanegcn-argoverse" in names
+
+
+def test_long_context_support_flags():
+    assert not get_config("whisper-large-v3").supports_long_context
+    for n in ASSIGNED_ARCHS:
+        if n != "whisper-large-v3":
+            assert get_config(n).supports_long_context, n
+
+
+def test_reduced_variants_are_small():
+    for n in ASSIGNED_ARCHS:
+        r = get_config(n).reduced()
+        assert r.num_layers <= 4
+        assert r.d_model <= 512
+        if r.is_moe:
+            assert r.num_experts <= 4
+
+
+def test_resnet9_param_count_near_paper():
+    from repro.models.registry import build_model
+
+    m = build_model(get_config("resnet9-cifar10"))
+    # paper: 6,568,650 parameters for ResNet-9
+    assert abs(m.num_params() - 6_568_650) / 6_568_650 < 0.01

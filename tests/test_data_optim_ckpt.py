@@ -1,0 +1,120 @@
+"""Data pipeline, optimizers, checkpointing."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore, save, latest_step
+from repro.data import (
+    DeviceLoader,
+    SyntheticCifar,
+    SyntheticTokens,
+    SyntheticTrajectories,
+    dirichlet_partition,
+    gamma_class_proportions,
+)
+from repro.optim import adamw, sgd, momentum, clip_by_global_norm
+from repro.optim.optimizers import apply_updates
+
+
+def test_dirichlet_rho_controls_concentration():
+    labels = np.repeat(np.arange(10), 100)
+    prior = np.full(10, 0.1)
+    low = gamma_class_proportions(50, prior, rho=0.1, seed=0)
+    high = gamma_class_proportions(50, prior, rho=100.0, seed=0)
+    # entropy of per-device mixtures: low rho -> concentrated (low entropy)
+    ent = lambda p: float(-(p * np.log(p + 1e-12)).sum(1).mean())
+    assert ent(low) < ent(high)
+
+
+def test_partition_sizes_equal():
+    labels = np.repeat(np.arange(10), 100)
+    parts = dirichlet_partition(labels, 20, rho=0.5, seed=1)
+    sizes = [len(p) for p in parts]
+    assert max(sizes) - min(sizes) <= 1
+    assert sum(sizes) <= len(labels) + 20  # wrap-around may duplicate a few
+
+
+def test_device_loader_stacks_all():
+    ds = SyntheticCifar()
+    imgs, labels = ds.make_split(80, seed=2)
+    parts = dirichlet_partition(labels, 4, rho=1.0)
+    loader = DeviceLoader(
+        [{"images": imgs[p], "labels": labels[p]} for p in parts], batch_size=5
+    )
+    b = loader.sample_all()
+    assert b["images"].shape == (4, 5, 32, 32, 3)
+    assert b["labels"].shape == (4, 5)
+
+
+def test_synthetic_cifar_learnable_signal():
+    """Templates + low noise => a nearest-template classifier is accurate."""
+    ds = SyntheticCifar(noise=0.2)
+    imgs, labels = ds.make_split(200, seed=3)
+    flat = imgs.reshape(len(imgs), -1)
+    temp = ds.templates.reshape(10, -1)
+    pred = np.argmin(
+        ((flat[:, None] - temp[None]) ** 2).sum(-1), axis=1
+    )
+    assert (pred == labels).mean() > 0.95
+
+
+def test_trajectories_shapes_and_ade_scale():
+    ds = SyntheticTrajectories()
+    d = ds.make_split(16, seed=4)
+    assert d["past"].shape == (16, 20, 2)
+    assert d["future"].shape == (16, 30, 2)
+    assert d["lanes"].shape == (16, 32, 2)
+    # future positions are centred at last observed point
+    assert np.abs(d["past"][:, -1]).max() < 1e-3
+
+
+def test_markov_tokens_in_vocab():
+    ds = SyntheticTokens(vocab_size=128)
+    d = ds.make_split(4, 64, seed=5)
+    assert d["tokens"].max() < 128 and d["tokens"].min() >= 0
+
+
+def _quadratic_losses(opt, steps=60):
+    target = jnp.asarray([3.0, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    losses = []
+    for _ in range(steps):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.sum((p["w"] - target) ** 2)
+        )(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+        losses.append(float(loss))
+    return losses
+
+
+def test_optimizers_descend_quadratic():
+    for opt in (sgd(0.1), momentum(0.05), adamw(0.3)):
+        losses = _quadratic_losses(opt)
+        assert losses[-1] < 0.05 * losses[0]
+
+
+def test_grad_clipping():
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+    assert float(norm) == 200.0
+
+
+def test_checkpoint_roundtrip():
+    tree = {
+        "layers": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+        "opt": [np.float32(3.0), {"m": np.ones(4, np.int32)}],
+    }
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 7, tree)
+        assert latest_step(d) == 7
+        back, step = restore(d)
+        assert step == 7
+        np.testing.assert_array_equal(back["layers"]["w"], tree["layers"]["w"])
+        np.testing.assert_array_equal(back["opt"][1]["m"], tree["opt"][1]["m"])
+        assert float(back["opt"][0]) == 3.0

@@ -1,0 +1,95 @@
+"""MADS controller closed forms (paper §V, Propositions 1-2, eq. 8)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mads as M
+from repro.core.mads import MadsController
+
+S = 1_000_000
+U = 32
+BW = 1e6
+N0 = 10 ** (-174 / 10.0) / 1000.0
+
+
+def mk(v=1e-4, pmax=0.2, unconstrained=False):
+    return MadsController(s=S, u=U, bandwidth=BW, noise_w_hz=N0, p_max=pmax,
+                          v_weight=v, energy_unconstrained=unconstrained)
+
+
+def test_proposition1_k_tight():
+    """k* = tau A(p) / (u + log2 s) — constraint (12b) tight."""
+    p = jnp.asarray([0.1])
+    h2 = jnp.asarray([1e-10])
+    tau = jnp.asarray([5.0])
+    k = M.mads_k(p, tau, h2, S, U, BW, N0)
+    a = float(M.rate_bps(p, h2, BW, N0)[0])
+    expect = min(5.0 * a / (U + np.ceil(np.log2(S))), S)
+    assert abs(float(k[0]) - expect) < 1e-3
+
+
+def test_power_increases_with_staleness():
+    """Proposition 2: p* increases with theta (stale devices push harder)."""
+    ctl = mk()
+    one = jnp.ones(1)
+    q = jnp.asarray([10.0])
+    h2 = jnp.asarray([1e-9])
+    tau = jnp.asarray([4.0])
+    ps = [
+        float(ctl.select(one, jnp.asarray([th]), 100.0 * one, q, tau, h2)[1][0])
+        for th in (1.0, 5.0, 25.0)
+    ]
+    assert ps[0] <= ps[1] <= ps[2]
+
+
+def test_power_clipped_to_pmax():
+    ctl = mk(v=1.0)  # huge V -> wants max power
+    one = jnp.ones(1)
+    k, p, e = ctl.select(one, one * 50, one * 1e3, one * 1e-9, one * 4.0,
+                         jnp.asarray([1e-9]))
+    assert float(p[0]) <= 0.2 + 1e-9
+
+
+def test_zero_queue_gives_max_feasible_power():
+    """q=0 => energy cost-free this round => transmit at the cap."""
+    ctl = mk()
+    one = jnp.ones(1)
+    k, p, e = ctl.select(one, one, one * 100.0, one * 0.0, one * 4.0,
+                         jnp.asarray([1e-9]))
+    cap = float(M.power_cap(one * 4.0, jnp.asarray([1e-9]), S, U, BW, N0, 0.2)[0])
+    assert abs(float(p[0]) - cap) < 1e-6
+
+
+def test_no_contact_no_power():
+    ctl = mk()
+    zero = jnp.zeros(1)
+    one = jnp.ones(1)
+    k, p, e = ctl.select(zero, one, one * 100.0, one * 1.0, one * 4.0, one * 1e-9)
+    assert float(k[0]) == 0.0 and float(p[0]) == 0.0 and float(e[0]) == 0.0
+
+
+def test_queue_update_eq8():
+    ctl = mk()
+    q = jnp.asarray([1.0, 0.0])
+    energy = jnp.asarray([2.0, 0.0])
+    budget = jnp.asarray([100.0, 100.0])
+    q2 = ctl.queue_update(q, energy, budget, rounds=100)
+    np.testing.assert_allclose(np.asarray(q2), [1.0 + 2.0 - 1.0, 0.0])
+
+
+def test_k_increases_with_contact_time():
+    """Closed form: k* grows with tau (more window -> more gradients)."""
+    ctl = mk()
+    one = jnp.ones(1)
+    ks = [
+        float(ctl.select(one, one, one * 100.0, one * 0.1, one * t, one * 1e-9)[0][0])
+        for t in (1.0, 4.0, 16.0)
+    ]
+    assert ks[0] <= ks[1] <= ks[2]
+
+
+def test_optimal_benchmark_ignores_queue():
+    ctl = mk(unconstrained=True)
+    one = jnp.ones(1)
+    _, p_lo, _ = ctl.select(one, one, one * 1.0, one * 1e9, one * 4.0, one * 1e-9)
+    _, p_hi, _ = ctl.select(one, one, one * 1.0, one * 0.0, one * 4.0, one * 1e-9)
+    assert abs(float(p_lo[0]) - float(p_hi[0])) < 1e-9  # queue-independent

@@ -1,0 +1,70 @@
+"""Mobility process + wireless channel statistics (paper §III-B, §VI)."""
+import numpy as np
+import pytest
+
+from repro.channel import WirelessChannel, shannon_rate
+from repro.mobility.contact import ContactProcess
+from repro.mobility.waypoint import RandomWaypoint, measure_contact_stats
+
+
+def test_contact_rate_matches_renewal_theory():
+    """P(round overlaps a contact) ~ (c + delta)/(c + lambda)."""
+    c, lam, delta = 4.0, 400.0, 10.0
+    proc = ContactProcess(16, c, lam, delta, seed=1)
+    zeta, tau = proc.sample_rounds(3000)
+    rate = zeta.mean()
+    expect = (c + delta) / (c + lam)
+    assert abs(rate - expect) / expect < 0.2, (rate, expect)
+
+
+def test_contact_durations_exponential_mean():
+    proc = ContactProcess(8, 6.0, 100.0, 10.0, seed=2)
+    zeta, tau = proc.sample_rounds(4000)
+    durs = tau[zeta == 1]
+    assert abs(durs.mean() - 6.0) / 6.0 < 0.15
+
+
+def test_waypoint_speed_inverse_relation():
+    """Fig. 4: contact & inter-contact times fall as speed rises."""
+    stats = []
+    for v in (5.0, 20.0):
+        rw = RandomWaypoint(num_devices=12, mean_speed=v, seed=3)
+        trace = rw.simulate(4000.0)
+        stats.append(measure_contact_stats(trace))
+    (c_slow, g_slow), (c_fast, g_fast) = stats
+    assert c_fast < c_slow
+    assert g_fast < g_slow
+
+
+def test_pathloss_los_below_nlos():
+    ch = WirelessChannel()
+    assert ch.pathloss_db(50.0, True) < ch.pathloss_db(50.0, False)
+
+
+def test_pathloss_matches_tr38901_formula():
+    ch = WirelessChannel(carrier_ghz=3.5)
+    d = 100.0
+    expect = 32.4 + 21.0 * np.log10(d) + 20.0 * np.log10(3.5)
+    assert abs(float(ch.pathloss_db(d, True)) - expect) < 1e-9
+
+
+def test_rate_monotone_in_power():
+    ch = WirelessChannel(seed=5)
+    h2 = 1e-10
+    rates = [shannon_rate(p, h2, 1e6) for p in (0.01, 0.05, 0.2)]
+    assert rates[0] < rates[1] < rates[2]
+
+
+def test_los_probability_bounds():
+    ch = WirelessChannel()
+    d = np.array([1.0, 18.0, 50.0, 200.0])
+    p = ch.los_prob(d)
+    assert (p <= 1.0).all() and (p >= 0.0).all()
+    assert p[0] == 1.0 and p[-1] < p[-2]
+
+
+def test_gain_sampling_reasonable_snr():
+    """At p_max=0.2 W within 100 m, rates are in the Mbps regime (paper)."""
+    ch = WirelessChannel(seed=6)
+    r = ch.mean_rate(0.2, samples=2000)
+    assert 1e5 < r < 1e9

@@ -1,0 +1,130 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsify as SP
+from repro.core import theory as T
+from repro.launch import roofline as RL
+from repro.utils.tree import flatten_concat, unflatten_like
+
+SET = dict(max_examples=30, deadline=None)
+
+
+@settings(**SET)
+@given(
+    n=st.integers(8, 2000),
+    k=st.floats(0, 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparsify_partition_invariant(n, k, seed):
+    """upload + error == x and non-overlapping supports, for any k."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    up, err, cnt = SP.sparsify_topk(x, k * n, method="exact")
+    np.testing.assert_allclose(np.asarray(up + err), np.asarray(x), atol=1e-7)
+    overlap = np.asarray((up != 0) & (err != 0))
+    assert not overlap.any()
+    assert 0 <= float(cnt) <= n
+
+
+@settings(**SET)
+@given(
+    n=st.integers(8, 500),
+    k1=st.floats(0, 0.5),
+    k2=st.floats(0.5, 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparsify_error_monotone_in_k(n, k1, k2, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    _, e1, _ = SP.sparsify_topk(x, k1 * n, method="exact")
+    _, e2, _ = SP.sparsify_topk(x, k2 * n, method="exact")
+    assert float(jnp.sum(e2**2)) <= float(jnp.sum(e1**2)) + 1e-6
+
+
+@settings(**SET)
+@given(
+    c=st.floats(0.5, 50),
+    lam=st.floats(1, 2000),
+    delta=st.floats(1, 60),
+)
+def test_staleness_bound_at_least_one(c, lam, delta):
+    """Theta >= 1 always (Lemma 2), finite for lam > 0."""
+    th = T.staleness_second_moment(c, lam, delta)
+    assert th >= 1.0
+    assert np.isfinite(th)
+
+
+@settings(**SET)
+@given(
+    rate=st.floats(1e4, 1e8),
+    c=st.floats(0.1, 100),
+    s=st.integers(100, 10**9),
+)
+def test_gamma_in_unit_interval(rate, c, s):
+    g = T.gamma(rate, c, s)
+    gm = T.gamma_model(rate, c, s)
+    assert 0.0 <= gm <= g <= 1.0
+
+
+@settings(**SET)
+@given(
+    seeds=st.integers(0, 2**31 - 1),
+    shapes=st.lists(st.integers(1, 7), min_size=1, max_size=4),
+)
+def test_flatten_unflatten_roundtrip(seeds, shapes):
+    rng = np.random.default_rng(seeds)
+    tree = {f"k{i}": jnp.asarray(rng.normal(0, 1, (s, 2)), jnp.float32)
+            for i, s in enumerate(shapes)}
+    flat = flatten_concat(tree)
+    back = unflatten_like(flat, tree)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(back[k]), np.asarray(tree[k]))
+
+
+@settings(**SET)
+@given(
+    g=st.integers(2, 512),
+    nelem=st.integers(1, 10**6),
+)
+def test_roofline_collective_factors_positive(g, nelem):
+    line = f"  %ar = bf16[{nelem}] all-reduce(%x), replica_groups=[{512//g},{g}]<=[512]"
+    text = "ENTRY %main () -> bf16[1] {\n" + line + "\n}"
+    stats = RL.parse_collectives(text, 512)
+    assert stats.total_bytes >= 0
+    expected = 2.0 * (g - 1) / g * nelem * 2
+    np.testing.assert_allclose(stats.bytes_by_kind["all-reduce"], expected)
+
+
+@settings(**SET)
+@given(st.data())
+def test_pspec_never_reuses_mesh_axis(data):
+    from jax.sharding import Mesh
+
+    from repro.sharding import rules as R
+
+    names = ["embed", "heads", "kv_heads", "head_dim", "mlp", "vocab",
+             "experts", "batch", "seq", None]
+    ndim = data.draw(st.integers(1, 5))
+    dims = tuple(data.draw(st.sampled_from(names)) for _ in range(ndim))
+    shape = tuple(data.draw(st.sampled_from([1, 4, 16, 28, 60, 128])) for _ in range(ndim))
+    devs = np.tile(np.array(jax.devices()[:1]), 8).reshape(2, 4)
+    mesh = Mesh(devs, ("data", "model"))
+    ps = R.logical_to_pspec(dims, shape, R.RULES_SERVE, mesh)
+    used = []
+    for entry in ps:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        used.extend(axes)
+    assert len(used) == len(set(used))
+    # divisibility always respected
+    axis_sizes = {"data": 2, "model": 4}
+    for entry, size in zip(tuple(ps) + (None,) * ndim, shape):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = int(np.prod([axis_sizes[a] for a in axes]))
+        assert size % prod == 0

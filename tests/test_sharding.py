@@ -1,0 +1,94 @@
+"""Logical axis rules: divisibility fallback + pspec construction."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import rules as R
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # abstract mesh over whatever devices exist: use 1 device x N via reshape
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    from jax.sharding import Mesh
+
+    return Mesh(devs, ("data", "model"))
+
+
+def _mesh(shape, axes):
+    from jax.sharding import Mesh
+
+    n = int(np.prod(shape))
+    devs = np.tile(np.array(jax.devices()[:1]), n).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def test_heads_divisible_sharded():
+    m = _mesh((2, 4), ("data", "model"))
+    ps = R.logical_to_pspec(("embed", "heads", "head_dim"), (512, 8, 64),
+                            R.RULES_TRAIN, m)
+    assert ps == P(None, "model")
+
+
+def test_heads_indivisible_falls_back_to_head_dim():
+    """qwen2-7b case: 28 heads % 16 != 0 -> shard head_dim instead."""
+    m = _mesh((1, 16), ("data", "model"))
+    ps = R.logical_to_pspec(("embed", "kv_heads", "head_dim"), (3584, 4, 128),
+                            R.RULES_TRAIN, m)
+    assert ps == P(None, None, "model")
+
+
+def test_experts_indivisible_unsharded():
+    """qwen2-moe: 60 experts % 16 != 0 -> expert_mlp takes model."""
+    m = _mesh((1, 16), ("data", "model"))
+    ps = R.logical_to_pspec(("experts", "embed", "expert_mlp"), (60, 2048, 1408),
+                            R.RULES_TRAIN, m)
+    assert ps == P(None, None, "model")
+
+
+def test_axis_used_once_per_tensor():
+    m = _mesh((2, 4), ("data", "model"))
+    ps = R.logical_to_pspec(("mlp", "embed", "heads"), (64, 64, 64),
+                            R.RULES_TRAIN, m)
+    used = [a for a in ps if a is not None]
+    assert len(used) == len(set(used))
+
+
+def test_batch_priority_pod_data():
+    m = _mesh((2, 2, 2), ("pod", "data", "model"))
+    ps = R.logical_to_pspec(("batch", "seq"), (64, 128), R.RULES_SERVE, m)
+    assert ps == P(("pod", "data"))
+
+
+def test_long_context_cache_seq_sharded_when_batch_one():
+    """long_500k: batch=1 unshardable -> cache 'seq' takes the data axis."""
+    m = _mesh((4, 2), ("data", "model"))
+    ps = R.logical_to_pspec(
+        ("layers", "batch", "seq", "kv_heads", "head_dim"),
+        (28, 1, 8192, 8, 128), R.RULES_SERVE, m,
+    )
+    assert ps == P(None, None, "data", "model")  # kv=8 divisible by model=2
+
+
+def test_client_axis_on_data():
+    m = _mesh((4, 2), ("data", "model"))
+    rules = dict(R.RULES_TRAIN, client=[("pod", "data"), ("data",)])
+    ps = R.logical_to_pspec(("client", "embed", "mlp"), (4, 64, 64), rules, m)
+    assert ps == P("data", None, "model")
+
+
+def test_param_spec_tree_roundtrip():
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+
+    model = build_model(get_config("llama3.2-3b").reduced())
+    axes = model.param_axes()
+    shapes = R.shapes_tree(model.specs)
+    flat_axes = jax.tree.leaves(
+        axes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    flat_shapes = jax.tree.leaves(shapes)
+    assert len(flat_axes) == len(flat_shapes)
+    for d, s in zip(flat_axes, flat_shapes):
+        assert len(d) == len(s.shape), (d, s.shape)

@@ -1,0 +1,89 @@
+"""Sparsification operator semantics (paper §III-D)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparsify as SP
+
+RNG = np.random.default_rng(42)
+
+
+def test_exact_topk_selects_largest():
+    x = jnp.asarray([0.1, -5.0, 0.3, 2.0, -0.2, 4.0])
+    up, err, k = SP.sparsify_topk(x, 3, method="exact")
+    np.testing.assert_allclose(np.asarray(up), [0, -5.0, 0, 2.0, 0, 4.0], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(err), [0.1, 0, 0.3, 0, -0.2, 0], atol=1e-6)
+    assert float(k) == 3
+
+
+def test_upload_plus_error_reconstructs_x():
+    x = jnp.asarray(RNG.normal(0, 1, 4096), jnp.float32)
+    for k in [0, 1, 100, 4096]:
+        up, err, _ = SP.sparsify_topk(x, k, method="exact")
+        np.testing.assert_allclose(np.asarray(up + err), np.asarray(x))
+
+
+def test_k_zero_uploads_nothing():
+    x = jnp.asarray(RNG.normal(0, 1, 128), jnp.float32)
+    up, err, k = SP.sparsify_topk(x, 0, method="exact")
+    assert float(jnp.sum(jnp.abs(up))) == 0
+    assert float(k) == 0
+
+
+def test_error_norm_decreases_with_k():
+    """Larger k => smaller sparsification error (Lemma 3 mechanism)."""
+    x = jnp.asarray(RNG.normal(0, 1, 2048), jnp.float32)
+    errs = []
+    for k in [16, 64, 256, 1024, 2048]:
+        _, err, _ = SP.sparsify_topk(x, k, method="exact")
+        errs.append(float(jnp.sum(err**2)))
+    assert all(a >= b for a, b in zip(errs, errs[1:]))
+    assert errs[-1] == 0.0
+
+
+def test_sampled_close_to_exact():
+    x = jnp.asarray(RNG.normal(0, 1, 100_000), jnp.float32)
+    k = 10_000
+    _, _, k_exact = SP.sparsify_topk(x, k, method="exact")
+    _, _, k_sampled = SP.sparsify_topk(x, k, method="sampled", sample=16384)
+    assert abs(float(k_sampled) - k) / k < 0.1  # within 10%
+
+
+def test_tree_sparsify_global_threshold():
+    """One global threshold across leaves: big-magnitude leaf wins."""
+    tree = {"a": jnp.full((100,), 0.01), "b": jnp.full((10,), 1.0)}
+    up, err, k = SP.sparsify_tree(tree, 10, method="exact")
+    assert float(jnp.sum(jnp.abs(up["a"]))) == 0.0
+    np.testing.assert_allclose(np.asarray(up["b"]), 1.0)
+    assert float(k) == 10
+
+
+def test_bits_accounting():
+    s, u = 2**20, 32
+    bits = SP.bits_for_k(100.0, s, u)
+    assert float(bits) == 100 * (32 + 20)
+    k = SP.k_for_bits(float(bits), s, u)
+    assert abs(float(k) - 100) < 1e-3
+
+
+def test_sparsify_error_bounded_by_lemma3_shape():
+    """E||x - S(x)||^2 <= (1 - k/s)-ish ||x||^2 (uniform-ish magnitudes)."""
+    x = jnp.asarray(RNG.normal(0, 1, 8192), jnp.float32)
+    k = 2048
+    _, err, _ = SP.sparsify_topk(x, k, method="exact")
+    # top-k always does at least as well as random-k:
+    assert float(jnp.sum(err**2)) <= (1 - k / 8192) * float(jnp.sum(x**2)) + 1e-5
+
+
+def test_quantize_values_roundtrip_and_noop():
+    x = jnp.asarray(RNG.normal(0, 2, 512), jnp.float32)
+    same = SP.quantize_values(x, 32)
+    np.testing.assert_array_equal(np.asarray(same), np.asarray(x))
+    q8 = SP.quantize_values(x, 8)
+    err = float(jnp.max(jnp.abs(q8 - x)))
+    amax = float(jnp.max(jnp.abs(x)))
+    assert err <= amax / 127 + 1e-6  # one quantisation step
+    tree = {"a": x, "b": x * 0.1}
+    qt = SP.quantize_values(tree, 8)
+    assert set(qt) == {"a", "b"}
