@@ -1,15 +1,21 @@
-"""Paper Figs. 2-5: mobility's effect on AFL convergence.
+"""Paper Figs. 2-5: mobility's effect on AFL convergence, plus the
+scenario-engine vectorization speedups.
 
 fig2_contact        accuracy vs mean contact time (Fig. 2)
 fig3_intercontact   accuracy vs mean inter-contact time (Fig. 3)
 fig4_waypoint       random-waypoint c, lambda vs speed (Fig. 4)
 fig5_speed          accuracy vs device speed, U-shape (Fig. 5)
+vectorized_speedup  scenario engine vs the seed Python-loop paths
+scenario_models     per-model (zeta, tau, h2) generation cost
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
 from benchmarks.common import cifar_federation, csv_row, run_policy
+from repro.mobility.contact import ContactProcess
 from repro.mobility.waypoint import RandomWaypoint, measure_contact_stats
 
 ROUNDS = 30
@@ -73,5 +79,64 @@ def fig5_speed():
     return rows
 
 
+def vectorized_speedup():
+    """Scenario-engine vectorization vs the seed Python-loop paths at
+    N=100, rounds=1000 (delta=10 s, dt=1 s -> 10k kinematic steps)."""
+    from repro.scenarios import RandomWaypointModel
+
+    rows = []
+    n, rounds, delta = 100, 1000, 10.0
+
+    def best(fn, reps=5):  # min over repeats rejects scheduler noise
+        fn()  # warm
+        return min(
+            (lambda t0: (fn(), time.time() - t0)[1])(time.time())
+            for _ in range(reps)
+        )
+
+    # (a) renewal contact sampling: batched vs per-device while-loop
+    proc = ContactProcess(n, 4.0, 400.0, delta, seed=1)
+    t_vec = best(lambda: proc.sample_rounds(rounds))
+    t_loop = best(lambda: proc.sample_rounds_loop(rounds), reps=3)
+    rows.append(csv_row(
+        "contact_sampling_vectorized", t_vec * 1e6,
+        f"loop_us={t_loop * 1e6:.0f};speedup={t_loop / t_vec:.1f}x",
+    ))
+
+    # (b) trace generation: leg-based RWP vs the seed per-step loop
+    duration = rounds * delta
+    seed_rw = RandomWaypoint(num_devices=n, mean_speed=10.0, seed=4)
+    t_seed = best(lambda: seed_rw.simulate(duration), reps=3)
+    vec_rw = RandomWaypointModel(num_devices=n, mean_speed=10.0, seed=4,
+                                 mobile_mes=True)
+    t_vec = best(lambda: vec_rw.trace(duration))
+    rows.append(csv_row(
+        "rwp_trace_vectorized", t_vec * 1e6,
+        f"seed_loop_us={t_seed * 1e6:.0f};speedup={t_seed / t_vec:.1f}x",
+    ))
+    return rows
+
+
+def scenario_models():
+    """End-to-end (zeta, tau, h2) generation cost per mobility model."""
+    from repro.configs import FLConfig
+    from repro.scenarios import ScenarioProvider
+
+    rows = []
+    for name in ("exponential", "rwp", "gauss_markov", "manhattan", "hotspot"):
+        fl = FLConfig(num_devices=100, rounds=1000, mobility_model=name,
+                      speed=10.0)
+        t0 = time.time()
+        zeta, tau, h2 = ScenarioProvider.from_config(fl).schedule()
+        wall = time.time() - t0
+        rows.append(csv_row(
+            f"scenario_{name}", wall * 1e6,
+            f"contact_rate={zeta.mean():.4f};"
+            f"tau={float(tau[zeta == 1].mean()) if zeta.any() else 0:.1f}s",
+        ))
+    return rows
+
+
 def run():
-    return fig2_contact() + fig3_intercontact() + fig4_waypoint() + fig5_speed()
+    return (fig2_contact() + fig3_intercontact() + fig4_waypoint()
+            + fig5_speed() + vectorized_speedup() + scenario_models())

@@ -162,6 +162,17 @@ class FLConfig:
     speed: float = 0.0  # if >0: c=C/v, lambda=Lambda/v
     contact_const: float = 40.0  # C
     intercontact_const: float = 4000.0  # Lambda
+    # scenario engine (repro/scenarios): trace-based mobility + channels
+    mobility_model: str = "exponential"  # exponential|rwp|gauss_markov|manhattan|hotspot|static
+    area: float = 1000.0  # m, square side
+    comm_range: float = 100.0  # m, device-MES contact range
+    mobility_dt: float = 1.0  # s, kinematics sampling step
+    pause_max: float = 5.0  # s, rwp waypoint pause
+    gm_corr_dist: float = 200.0  # m, gauss_markov velocity decorrelation
+    street_block: float = 100.0  # m, manhattan grid spacing
+    num_hotspots: int = 4
+    hotspot_radius: float = 150.0  # m, RMS excursion around a hotspot
+    shadow_corr_dist: float = 25.0  # m, Gudmundson shadowing decorrelation
     # wireless (Table I)
     bandwidth: float = 1e6  # B_n, Hz
     carrier_ghz: float = 3.5

@@ -18,6 +18,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import mads as M
 from repro.core import sparsify as SP
 from repro.core.mads import MadsController
 
@@ -50,8 +51,6 @@ class Policy:
         if self.controller is not None and self.fixed_power <= 0:
             return self.controller.select(zeta, theta, x_norm2, q, tau, h2)
         # fixed-power policies: k fills the contact window at power p_fix
-        from repro.core import mads as M
-
         p = jnp.full_like(tau, self.fixed_power) * zeta
         k = M.mads_k(p, tau, h2, ctl.s, ctl.u, ctl.bandwidth, ctl.noise_w_hz) * zeta
         if not self.sparsify:

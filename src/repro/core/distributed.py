@@ -212,6 +212,27 @@ def make_afl_train_step(model, cfg, dcfg: DistConfig, controller: MadsController
     return step
 
 
+def run_afl_rounds(step, state, provider, batch_fn, budgets,
+                   rounds: int | None = None):
+    """Drive a distributed AFL step from a ScenarioProvider.
+
+    ``provider`` is anything yielding per-round (zeta, tau, h2) triples —
+    normally ``repro.scenarios.ScenarioProvider`` — and ``batch_fn(r)``
+    returns the round's global batch.  Returns (state, metrics history).
+    """
+    history = []
+    for r, (zeta, tau, h2) in enumerate(provider):
+        if rounds is not None and r >= rounds:
+            break
+        state, m = step(
+            state, batch_fn(r), jnp.asarray(zeta, jnp.float32),
+            jnp.asarray(tau, jnp.float32), jnp.asarray(h2, jnp.float32),
+            budgets,
+        )
+        history.append(m)
+    return state, history
+
+
 def make_afl_train_system(model, cfg, mesh: Mesh, dcfg: DistConfig | None = None,
                           rules=None, controller: MadsController | None = None):
     """Step + shardings bundle for the launcher / dry-run."""

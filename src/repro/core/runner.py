@@ -17,7 +17,7 @@ import numpy as np
 from repro.channel import WirelessChannel
 from repro.core import baselines as BL
 from repro.core.afl import afl_init, afl_round
-from repro.mobility import contact_schedule
+from repro.scenarios import ScenarioProvider
 from repro.utils import get_logger
 
 log = get_logger("repro.runner")
@@ -64,16 +64,20 @@ def run_afl(
 
     policy = BL.ALL[policy_name](s, fl)
     if schedule is None:
-        zeta, tau = contact_schedule(fl, rounds, seed)
-    else:
-        zeta, tau = schedule
+        provider = ScenarioProvider.from_config(fl, rounds, seed)
+    elif isinstance(schedule, ScenarioProvider):
+        provider = schedule  # caller-built scenario, reused as-is
+    else:  # legacy (zeta, tau) [+ h2] arrays; without h2: i.i.d. gains
+        chan = WirelessChannel(
+            bandwidth=fl.bandwidth, carrier_ghz=fl.carrier_ghz,
+            noise_dbm_hz=fl.noise_dbm_hz, seed=seed + 1,
+        )
+        provider = ScenarioProvider.from_arrays(*schedule, channel=chan)
     if policy_name == "fedmobile":
+        zeta, tau, h2 = provider.schedule()
         zeta, tau = BL.apply_relays(zeta, tau, seed=seed)
+        provider = ScenarioProvider.from_arrays(zeta, tau, h2=h2)
 
-    chan = WirelessChannel(
-        bandwidth=fl.bandwidth, carrier_ghz=fl.carrier_ghz,
-        noise_dbm_hz=fl.noise_dbm_hz, seed=seed + 1,
-    )
     rng_np = np.random.default_rng(seed + 2)
     budgets = jnp.asarray(
         rng_np.uniform(*fl.energy_budget, fl.num_devices), jnp.float32
@@ -90,9 +94,10 @@ def run_afl(
     tot_uploads = tot_k = tot_power = 0.0
     for r in range(rounds):
         batch = {k: jnp.asarray(v) for k, v in loader.sample_all().items()}
-        h2 = jnp.asarray(chan.sample_gain(fl.num_devices), jnp.float32)
+        zeta_r, tau_r, h2_r = provider.round(r)
         state, m = afl_round(
-            state, batch, jnp.asarray(zeta[r]), jnp.asarray(tau[r]), h2, budgets,
+            state, batch, jnp.asarray(zeta_r), jnp.asarray(tau_r),
+            jnp.asarray(h2_r, jnp.float32), budgets,
             model=model, cfg=cfg, fl=fl, policy=policy,
         )
         tot_uploads += float(jnp.sum(m["success"]))

@@ -1,0 +1,5 @@
+"""Launchers: simulation training, distributed dry-run, serving, roofline.
+
+Deliberately empty of imports — several submodules set XLA flags or touch
+jax device state at import time and must only be imported explicitly.
+"""

@@ -73,6 +73,12 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--rho", type=float, default=0.5, help="non-iid Dirichlet level")
     ap.add_argument("--speed", type=float, default=0.0, help="m/s; 0 = direct c/lambda")
+    ap.add_argument("--mobility", default="exponential",
+                    choices=["exponential", "rwp", "gauss_markov", "manhattan",
+                             "hotspot", "static"],
+                    help="scenario engine mobility model (repro/scenarios)")
+    ap.add_argument("--area", type=float, default=1000.0, help="m, square side")
+    ap.add_argument("--comm-range", type=float, default=100.0)
     ap.add_argument("--contact", type=float, default=4.0)
     ap.add_argument("--intercontact", type=float, default=400.0)
     ap.add_argument("--v-weight", type=float, default=1e-4)
@@ -91,6 +97,7 @@ def main() -> None:
     fl = FLConfig(
         num_devices=args.devices, rounds=args.rounds, batch_size=args.batch_size,
         learning_rate=args.lr, dirichlet_rho=args.rho, speed=args.speed,
+        mobility_model=args.mobility, area=args.area, comm_range=args.comm_range,
         mean_contact=args.contact, mean_intercontact=args.intercontact,
         lyapunov_v=args.v_weight, seed=args.seed,
         sparsifier="exact" if model.num_params() < 2_000_000 else "sampled",

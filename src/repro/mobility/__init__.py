@@ -1,4 +1,14 @@
-from repro.mobility.contact import ContactProcess, contact_schedule
+from repro.mobility.contact import (
+    ContactProcess,
+    contact_schedule,
+    intervals_to_rounds,
+)
 from repro.mobility.waypoint import RandomWaypoint, measure_contact_stats
 
-__all__ = ["ContactProcess", "contact_schedule", "RandomWaypoint", "measure_contact_stats"]
+__all__ = [
+    "ContactProcess",
+    "contact_schedule",
+    "intervals_to_rounds",
+    "RandomWaypoint",
+    "measure_contact_stats",
+]

@@ -8,12 +8,67 @@ available for the transfer) — matching the paper's abstraction where
 tau_n^(r) bounds the upload bits via tau * A.
 
 With speed coupling (Lemma/Corollary setting): c = C / v, lambda = L / v.
+
+``sample_rounds`` is fully vectorized (batched renewal sampling across
+devices + a flat interval->round scatter); the seed per-device Python loop
+is kept as ``sample_rounds_loop`` for the equivalence test and the
+``benchmarks/bench_mobility.py`` speedup entry.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+
+def intervals_to_rounds(dev, start, dur, num_devices: int, rounds: int,
+                        delta: float):
+    """Map contact intervals to per-round (zeta, tau), Algorithm-1 semantics.
+
+    dev / start / dur: flat arrays of contact intervals, time-ordered within
+    each device.  A device is in contact for every round its interval
+    overlaps; tau is the full interval duration in the round where the
+    contact begins and the remaining duration from the round boundary in
+    continuation rounds.  When two intervals touch the same round (a gap
+    shorter than delta), the earlier interval claims it — identical to the
+    sequential loop's first-writer-wins rule.
+
+    Returns (zeta, tau): (rounds, num_devices) int32 / float32.
+    """
+    zeta = np.zeros(rounds * num_devices, np.int32)
+    tau = np.zeros(rounds * num_devices, np.float32)
+    horizon = rounds * delta
+    keep = (np.asarray(start) < horizon) & (np.asarray(dur) > 0)
+    dev = np.asarray(dev)[keep]
+    start = np.asarray(start, np.float64)[keep]
+    dur = np.asarray(dur, np.float64)[keep]
+    if len(dev) == 0:
+        return (zeta.reshape(rounds, num_devices),
+                tau.reshape(rounds, num_devices))
+
+    end = start + dur
+    r0 = (start / delta).astype(np.int64)
+    # last covered round: ceil(end/delta) - 1, so a contact ending exactly on
+    # a round boundary does not claim the next round with tau = 0 (discrete
+    # traces hit boundaries constantly; the continuous model almost never)
+    r1 = np.ceil(np.minimum(end, horizon - 1e-9) / delta).astype(np.int64) - 1
+    r1 = np.minimum(np.maximum(r1, r0), rounds - 1)
+    length = r1 - r0 + 1
+
+    # expand each interval to its covered rounds (flat repeat + offset trick)
+    iid = np.repeat(np.arange(len(length)), length)
+    offs = np.arange(length.sum()) - np.repeat(np.cumsum(length) - length, length)
+    rr = r0[iid] + offs
+    tau_cand = np.where(offs == 0, dur[iid], end[iid] - rr * delta)
+    flat = rr * num_devices + dev[iid]
+
+    # first interval to reach a (round, device) cell wins: scatter in reverse
+    # time order — duplicate fancy indices keep the LAST write, which after
+    # reversal is the earliest interval (the sequential loop's rule)
+    zeta[flat[::-1]] = 1
+    tau[flat[::-1]] = tau_cand[::-1]
+    return (zeta.reshape(rounds, num_devices),
+            tau.reshape(rounds, num_devices))
 
 
 @dataclasses.dataclass
@@ -45,14 +100,45 @@ class ContactProcess:
         the round where the contact begins (the paper's tau ~ Exp(c)), and
         the remaining duration from the round boundary for continuation
         rounds of a long contact.
+
+        Vectorized: all renewal cycles are drawn in one batch across devices,
+        then contact intervals are scattered to rounds in one pass.
         """
+        rng = np.random.default_rng(self.seed)
+        n, delta = self.num_devices, self.round_duration
+        horizon = rounds * delta
+        c, lam = self.mean_contact, self.mean_intercontact
+
+        # start in contact or in a gap, per renewal stationarity
+        sic = rng.random(n) < c / (c + lam)
+        m = max(4, int(horizon / (c + lam) * 1.6) + 4)
+        while True:
+            cdur = np.maximum(rng.exponential(c, (n, m)), 1e-9)
+            gdur = np.maximum(rng.exponential(lam, (n, m)), 1e-9)
+            dur = np.empty((n, 2 * m))
+            dur[:, 0::2] = np.where(sic[:, None], cdur, gdur)
+            dur[:, 1::2] = np.where(sic[:, None], gdur, cdur)
+            if dur.sum(axis=1).min() >= horizon:
+                break
+            m *= 2  # rare: a device's cycles fell short of the horizon
+
+        end = np.cumsum(dur, axis=1)
+        start = end - dur
+        is_contact = np.empty((n, 2 * m), bool)
+        is_contact[:, 0::2] = sic[:, None]
+        is_contact[:, 1::2] = ~sic[:, None]
+        sel = is_contact & (start < horizon)
+        dev = np.broadcast_to(np.arange(n)[:, None], sel.shape)[sel]
+        return intervals_to_rounds(dev, start[sel], dur[sel], n, rounds, delta)
+
+    def sample_rounds_loop(self, rounds: int):
+        """Seed per-device Python-loop sampler (reference / benchmark only)."""
         rng = np.random.default_rng(self.seed)
         delta = self.round_duration
         horizon = rounds * delta
         zeta = np.zeros((rounds, self.num_devices), np.int32)
         tau = np.zeros((rounds, self.num_devices), np.float64)
         for n in range(self.num_devices):
-            # start either in contact or in a gap, per renewal stationarity
             p_contact = self.mean_contact / (self.mean_contact + self.mean_intercontact)
             t = 0.0
             in_contact = rng.random() < p_contact
@@ -75,7 +161,11 @@ class ContactProcess:
 
 
 def contact_schedule(fl, rounds: int, seed: int | None = None):
-    """Build (zeta, tau) from an FLConfig (speed-coupled if fl.speed > 0)."""
+    """Build (zeta, tau) from an FLConfig (speed-coupled if fl.speed > 0).
+
+    Thin compatibility wrapper over the exponential model; new code should
+    use ``repro.scenarios.ScenarioProvider``, which also derives h2.
+    """
     seed = fl.seed if seed is None else seed
     if fl.speed > 0:
         proc = ContactProcess.from_speed(

@@ -58,14 +58,23 @@ class RandomWaypoint:
         return out
 
 
-def measure_contact_stats(in_range: np.ndarray, dt: float = 1.0):
-    """Mean contact & inter-contact durations from an in-range trace."""
+def measure_contact_stats(in_range: np.ndarray, dt: float = 1.0,
+                          drop_truncated: bool = True):
+    """Mean contact & inter-contact durations from an in-range trace.
+
+    The first and last segments of each device's trace are censored by the
+    observation window (their true start/end falls outside it), so counting
+    them biases both means low.  They are dropped by default; pass
+    ``drop_truncated=False`` for the seed's biased estimator.
+    """
     contacts, gaps = [], []
     for n in range(in_range.shape[1]):
         x = in_range[:, n].astype(np.int8)
         changes = np.flatnonzero(np.diff(x))
         bounds = np.concatenate([[0], changes + 1, [len(x)]])
         for i in range(len(bounds) - 1):
+            if drop_truncated and (i == 0 or i == len(bounds) - 2):
+                continue  # window-truncated: duration is a lower bound only
             seg = x[bounds[i]]
             length = (bounds[i + 1] - bounds[i]) * dt
             (contacts if seg else gaps).append(length)

@@ -1,0 +1,26 @@
+from repro.scenarios.channel import gains_along_trace
+from repro.scenarios.contacts import contact_intervals, rounds_from_trace
+from repro.scenarios.kinematics import (
+    GaussMarkovModel,
+    HotspotClusterModel,
+    ManhattanGridModel,
+    MobilityModel,
+    RandomWaypointModel,
+    Trace,
+)
+from repro.scenarios.provider import MODELS, ScenarioProvider, model_from_config
+
+__all__ = [
+    "GaussMarkovModel",
+    "HotspotClusterModel",
+    "ManhattanGridModel",
+    "MobilityModel",
+    "RandomWaypointModel",
+    "Trace",
+    "MODELS",
+    "ScenarioProvider",
+    "model_from_config",
+    "contact_intervals",
+    "rounds_from_trace",
+    "gains_along_trace",
+]

@@ -1,0 +1,198 @@
+"""ScenarioProvider — streaming (zeta, tau, h2) round inputs for AFL.
+
+One object owns the whole scenario: a mobility model (or the paper's
+exponential renewal abstraction), the contact extractor, and the
+position-coupled channel.  ``from_config(fl)`` reads everything from the
+``FLConfig`` scenario fields; the full rounds x N schedule is precomputed
+on first access (three rounds x N arrays: ~1 MB at the paper's scale,
+~120 MB at rounds=10k, N=1k) and then streamed per round to
+``core/runner.py`` or the distributed ``make_afl_train_step`` path.
+
+    provider = ScenarioProvider.from_config(fl, rounds)
+    for zeta_r, tau_r, h2_r in provider: ...   # or provider.round(r)
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.channel.wireless import WirelessChannel
+from repro.mobility.contact import ContactProcess
+from repro.scenarios.contacts import rounds_from_trace
+from repro.scenarios.kinematics import (
+    GaussMarkovModel,
+    HotspotClusterModel,
+    ManhattanGridModel,
+    MobilityModel,
+    RandomWaypointModel,
+)
+
+Schedule = Tuple[np.ndarray, np.ndarray, np.ndarray]
+
+MODELS = {
+    "rwp": RandomWaypointModel,
+    "gauss_markov": GaussMarkovModel,
+    "manhattan": ManhattanGridModel,
+    "hotspot": HotspotClusterModel,
+}
+
+
+def _channel_from_config(fl, seed: int) -> WirelessChannel:
+    return WirelessChannel(
+        bandwidth=fl.bandwidth, carrier_ghz=fl.carrier_ghz,
+        noise_dbm_hz=fl.noise_dbm_hz, seed=seed,
+    )
+
+
+def model_from_config(fl, seed: Optional[int] = None) -> MobilityModel:
+    """Build the FLConfig-selected kinematic model (trace models only).
+
+    ``fl.speed = 0`` is the legacy "unset" sentinel and maps to 10 m/s for
+    the moving models; use ``mobility_model="static"`` for motionless
+    hotspot crowds.
+    """
+    seed = fl.seed if seed is None else seed
+    name = fl.mobility_model
+    speed = fl.speed if fl.speed > 0 else 10.0
+    common = dict(num_devices=fl.num_devices, area=fl.area, mean_speed=speed,
+                  seed=seed)
+    if name == "rwp":
+        return RandomWaypointModel(pause_max=fl.pause_max, **common)
+    if name == "gauss_markov":
+        return GaussMarkovModel(corr_dist=fl.gm_corr_dist, **common)
+    if name == "manhattan":
+        return ManhattanGridModel(block=fl.street_block, **common)
+    if name in ("hotspot", "static"):
+        if name == "static":
+            common["mean_speed"] = 0.0
+        return HotspotClusterModel(
+            num_hotspots=fl.num_hotspots, hotspot_radius=fl.hotspot_radius,
+            **common,
+        )
+    raise KeyError(f"unknown mobility model {name!r}; known: "
+                   f"exponential, static, {sorted(MODELS)}")
+
+
+class ScenarioProvider:
+    """Streams per-round (zeta, tau, h2); precomputes the schedule lazily."""
+
+    def __init__(self, rounds: int, num_devices: int,
+                 build: Optional[Callable[[], Schedule]] = None,
+                 schedule: Optional[Schedule] = None):
+        self.rounds = rounds
+        self.num_devices = num_devices
+        self._build = build
+        self._schedule = schedule
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def from_config(cls, fl, rounds: Optional[int] = None,
+                    seed: Optional[int] = None) -> "ScenarioProvider":
+        """Scenario selected by ``fl.mobility_model``.
+
+        ``"exponential"`` reproduces the paper's renewal abstraction (and the
+        legacy ``contact_schedule`` distribution) with i.i.d. channel gains;
+        the trace models derive (zeta, tau) from simulated motion and h2
+        from the actual device-MES distances.
+        """
+        rounds = fl.rounds if rounds is None else rounds
+        seed = fl.seed if seed is None else seed
+        chan = _channel_from_config(fl, seed + 1)
+
+        if fl.mobility_model == "exponential":
+            def build() -> Schedule:
+                if fl.speed > 0:
+                    proc = ContactProcess.from_speed(
+                        fl.num_devices, fl.speed, fl.contact_const,
+                        fl.intercontact_const, fl.round_duration, seed,
+                    )
+                else:
+                    proc = ContactProcess(
+                        fl.num_devices, fl.mean_contact, fl.mean_intercontact,
+                        fl.round_duration, seed,
+                    )
+                zeta, tau = proc.sample_rounds(rounds)
+                # no positions in the renewal abstraction: i.i.d. gains as in
+                # the seed runner
+                h2 = chan.sample_gain((rounds, fl.num_devices))
+                return zeta, tau, h2.astype(np.float32)
+        else:
+            model = model_from_config(fl, seed)
+
+            def build() -> Schedule:
+                trace = model.trace(rounds * fl.round_duration, fl.mobility_dt)
+                zeta, tau, h2 = rounds_from_trace(
+                    trace, fl.comm_range, rounds, fl.round_duration,
+                    channel=chan, shadow_corr_dist=fl.shadow_corr_dist,
+                    rng=np.random.default_rng(seed + 1),
+                )
+                return zeta, tau, h2.astype(np.float32)
+
+        return cls(rounds, fl.num_devices, build=build)
+
+    @classmethod
+    def from_arrays(cls, zeta: np.ndarray, tau: np.ndarray,
+                    h2: Optional[np.ndarray] = None,
+                    channel: Optional[WirelessChannel] = None,
+                    seed: int = 0) -> "ScenarioProvider":
+        """Wrap a precomputed (zeta, tau) schedule (legacy / transformed).
+
+        Without h2, gains are sampled i.i.d. from ``channel`` (or a default
+        ``WirelessChannel``) — the seed runner's behaviour.
+        """
+        zeta = np.asarray(zeta)
+        rounds, n = zeta.shape
+        if h2 is None:
+            channel = channel or WirelessChannel(seed=seed)
+            h2 = channel.sample_gain((rounds, n))
+        return cls(rounds, n, schedule=(
+            zeta, np.asarray(tau, np.float32), np.asarray(h2, np.float32)
+        ))
+
+    @classmethod
+    def from_model(cls, model: MobilityModel, rounds: int,
+                   round_duration: float, comm_range: float = 100.0,
+                   channel: Optional[WirelessChannel] = None,
+                   dt: float = 1.0, shadow_corr_dist: float = 25.0,
+                   seed: int = 0) -> "ScenarioProvider":
+        """Scenario from an explicit kinematic model (tests / notebooks)."""
+        channel = channel or WirelessChannel(seed=seed + 1)
+
+        def build() -> Schedule:
+            trace = model.trace(rounds * round_duration, dt)
+            zeta, tau, h2 = rounds_from_trace(
+                trace, comm_range, rounds, round_duration, channel=channel,
+                shadow_corr_dist=shadow_corr_dist,
+                rng=np.random.default_rng(seed + 1),
+            )
+            return zeta, tau, h2.astype(np.float32)
+
+        return cls(rounds, model.num_devices, build=build)
+
+    # -- access -------------------------------------------------------------
+
+    def prefetch(self) -> "ScenarioProvider":
+        """Force schedule materialisation now (otherwise lazy)."""
+        self.schedule()
+        return self
+
+    def schedule(self) -> Schedule:
+        """The full (zeta, tau, h2) arrays, each (rounds, num_devices)."""
+        if self._schedule is None:
+            self._schedule = self._build()
+        return self._schedule
+
+    def round(self, r: int) -> Schedule:
+        """(zeta_r, tau_r, h2_r) for round r, each (num_devices,)."""
+        zeta, tau, h2 = self.schedule()
+        return zeta[r], tau[r], h2[r]
+
+    def __iter__(self) -> Iterator[Schedule]:
+        zeta, tau, h2 = self.schedule()
+        for r in range(self.rounds):
+            yield zeta[r], tau[r], h2[r]
+
+    def __len__(self) -> int:
+        return self.rounds

@@ -1,0 +1,364 @@
+"""Scenario engine: kinematics, contact extraction, position-coupled
+channels, and the ScenarioProvider streaming API."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.channel import WirelessChannel
+from repro.configs import FLConfig
+from repro.mobility.contact import ContactProcess, intervals_to_rounds
+from repro.mobility.waypoint import measure_contact_stats
+from repro.scenarios import (
+    GaussMarkovModel,
+    HotspotClusterModel,
+    ManhattanGridModel,
+    RandomWaypointModel,
+    ScenarioProvider,
+    Trace,
+    contact_intervals,
+    gains_along_trace,
+)
+
+ALL_MODELS = [
+    (RandomWaypointModel, dict(pause_max=0.0)),
+    (GaussMarkovModel, {}),
+    (ManhattanGridModel, {}),
+    (HotspotClusterModel, dict(hotspot_radius=250.0)),
+]
+
+
+# ---------------------------------------------------------------------------
+# kinematics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cls,extra", ALL_MODELS, ids=lambda x: getattr(x, "__name__", ""))
+def test_trace_shapes_and_bounds(cls, extra):
+    m = cls(num_devices=6, area=500.0, mean_speed=8.0, seed=3, **extra)
+    tr = m.trace(200.0, 1.0)
+    assert tr.pos.shape == (200, 6, 2)
+    assert tr.mes.shape == (200, 2)
+    assert np.isfinite(tr.pos).all()
+    assert tr.pos.min() >= -1e-6 and tr.pos.max() <= 500.0 + 1e-6
+    assert tr.in_range(100.0).dtype == bool
+
+
+@pytest.mark.parametrize("cls,extra", ALL_MODELS, ids=lambda x: getattr(x, "__name__", ""))
+def test_inverse_speed_law(cls, extra):
+    """Paper Fig. 4 / Corollary 1: c ~ C/v and lambda ~ L/v for EVERY
+    kinematic model — quadrupling the speed quarters both means."""
+    stats = []
+    for v, seed in ((3.0, 7), (12.0, 8)):
+        m = cls(num_devices=48, area=600.0, mean_speed=v, seed=seed, **extra)
+        c, g = measure_contact_stats(m.trace(6000.0, 0.5).in_range(100.0), 0.5)
+        stats.append((c, g))
+    (c_slow, g_slow), (c_fast, g_fast) = stats
+    assert c_fast > 0 and np.isfinite(g_fast)
+    # speeds differ 4x; allow +-45% statistical tolerance on the ratio
+    assert 2.2 < c_slow / c_fast < 7.3, (c_slow, c_fast)
+    assert 2.2 < g_slow / g_fast < 7.3, (g_slow, g_fast)
+
+
+def test_manhattan_stays_on_streets():
+    m = ManhattanGridModel(num_devices=8, area=600.0, mean_speed=10.0,
+                           block=100.0, seed=5)
+    tr = m.trace(500.0, 1.0)
+    # at any instant one coordinate is on a grid line (multiple of block)
+    frac = np.abs(tr.pos / 100.0 - np.round(tr.pos / 100.0))
+    assert (frac.min(axis=-1) < 1e-6).all()
+
+
+def test_hotspot_static_at_zero_speed():
+    m = HotspotClusterModel(num_devices=5, mean_speed=0.0, seed=2)
+    tr = m.trace(50.0, 1.0)
+    assert np.all(tr.pos == tr.pos[0])
+
+
+def test_rwp_mobile_mes_port_matches_seed_statistics():
+    """Vectorized RWP reproduces the seed per-step loop's contact stats."""
+    from repro.mobility.waypoint import RandomWaypoint
+
+    seed_trace = RandomWaypoint(num_devices=24, mean_speed=10.0, seed=4).simulate(4000.0)
+    vec = RandomWaypointModel(num_devices=24, mean_speed=10.0, seed=9,
+                              mobile_mes=True)
+    vec_in = vec.trace(4000.0, 1.0).in_range(100.0)
+    c0, g0 = measure_contact_stats(seed_trace)
+    c1, g1 = measure_contact_stats(vec_in)
+    assert abs(c1 - c0) / c0 < 0.5
+    assert abs(g1 - g0) / g0 < 0.5
+
+
+# ---------------------------------------------------------------------------
+# contact extraction + round mapping
+# ---------------------------------------------------------------------------
+
+
+def test_contact_intervals_simple():
+    in_range = np.array([[0, 1], [1, 1], [1, 0], [0, 0], [1, 0]], bool)
+    dev, start, dur = contact_intervals(in_range, dt=2.0)
+    np.testing.assert_array_equal(dev, [0, 0, 1])
+    np.testing.assert_array_equal(start, [2.0, 8.0, 0.0])
+    np.testing.assert_array_equal(dur, [4.0, 2.0, 4.0])
+
+
+def test_intervals_to_rounds_first_writer_wins():
+    # two contacts touch round 0; a long contact spans rounds 2..5
+    dev = np.array([0, 0, 0])
+    start = np.array([2.0, 7.0, 25.0])
+    dur = np.array([3.0, 1.0, 30.0])
+    zeta, tau = intervals_to_rounds(dev, start, dur, 1, 6, 10.0)
+    np.testing.assert_array_equal(zeta.ravel(), [1, 0, 1, 1, 1, 1])
+    np.testing.assert_allclose(tau.ravel(), [3.0, 0.0, 30.0, 25.0, 15.0, 5.0])
+
+
+def test_vectorized_contact_process_matches_loop():
+    """Batched renewal sampling reproduces the seed loop's distributions."""
+    proc = ContactProcess(64, 4.0, 400.0, 10.0, seed=5)
+    zv, tv = proc.sample_rounds(2000)
+    zl, tl = proc.sample_rounds_loop(2000)
+    assert zv.shape == zl.shape == (2000, 64)
+    # tau > 0 exactly on contact rounds
+    assert ((tv > 0) == (zv == 1)).all()
+    assert abs(zv.mean() - zl.mean()) / zl.mean() < 0.1
+    assert abs(tv[zv == 1].mean() - tl[zl == 1].mean()) / tl[zl == 1].mean() < 0.1
+
+
+# ---------------------------------------------------------------------------
+# position-coupled channel
+# ---------------------------------------------------------------------------
+
+
+def test_gains_static_devices_see_constant_channel():
+    chan = WirelessChannel(seed=1)
+    pos = np.broadcast_to(np.array([[30.0, 0.0], [80.0, 0.0]]), (50, 2, 2)).copy()
+    mes = np.zeros((50, 2))
+    h2 = gains_along_trace(chan, pos, mes, rng=np.random.default_rng(3))
+    # zero displacement -> shadowing and LOS state frozen -> constant gain
+    np.testing.assert_allclose(h2, np.broadcast_to(h2[0], h2.shape), rtol=1e-12)
+
+
+def test_gains_decrease_with_distance_pathloss():
+    chan = WirelessChannel(shadow_los_db=0.0, shadow_nlos_db=0.0, seed=1)
+    pos = np.broadcast_to(np.array([[15.0, 0.0], [90.0, 0.0]]), (5, 2, 2)).copy()
+    h2 = gains_along_trace(chan, pos, np.zeros((5, 2)),
+                           rng=np.random.default_rng(0))
+    # d=15 is guaranteed LOS; even NLOS at 15 m beats LOS at 90 m
+    assert (h2[:, 0] > h2[:, 1]).all()
+
+
+def test_rounds_from_trace_h2_sampled_at_round_starts():
+    """Non-integer round_duration/dt must not drift the h2 sample points."""
+    from repro.scenarios.contacts import rounds_from_trace
+
+    dt, delta, rounds = 4.0, 10.0, 50
+    steps = int(rounds * delta / dt)
+    t = np.arange(steps) * dt
+    # one device moving radially: d(t) = 5 + 0.02 t  (always LOS, d <= 18)
+    pos = np.stack([5.0 + 0.02 * t, np.zeros(steps)], -1)[:, None, :]
+    trace = Trace(pos=pos, mes=np.zeros((steps, 2)), dt=dt)
+    chan = WirelessChannel(shadow_los_db=0.0, shadow_nlos_db=0.0)
+    _, _, h2 = rounds_from_trace(trace, 100.0, rounds, delta, channel=chan,
+                                 rng=np.random.default_rng(0))
+    # invert the LOS path loss to recover the distance actually sampled
+    pl_db = -10 * np.log10(h2[:, 0])
+    d_rec = 10 ** ((pl_db - 32.4 - 20 * np.log10(chan.carrier_ghz)) / 21.0)
+    d_true = 5.0 + 0.02 * (np.arange(rounds) * delta)
+    assert np.abs(d_rec - d_true).max() < 0.02 * dt + 1e-6
+
+
+def test_gains_fast_motion_decorrelates():
+    chan = WirelessChannel(seed=1)
+    rng = np.random.default_rng(11)
+    steps = 400
+
+    def corr(step_len):
+        walk = np.cumsum(rng.normal(0, step_len, (steps, 1, 2)), axis=0)
+        pos = 500.0 + walk  # stay far from the MES so distance is ~constant
+        db = 10 * np.log10(gains_along_trace(
+            chan, pos, np.zeros((steps, 2)), rng=np.random.default_rng(5)))
+        x = db[:, 0] - db[:, 0].mean()
+        return float((x[1:] * x[:-1]).mean() / (x * x).mean())
+
+    assert corr(1.0) > corr(200.0) + 0.3  # slow motion -> correlated shadowing
+
+
+# ---------------------------------------------------------------------------
+# ScenarioProvider
+# ---------------------------------------------------------------------------
+
+
+def test_provider_exponential_matches_legacy_contact_schedule():
+    """Equivalence: the exponential scenario reproduces contact_schedule."""
+    from repro.mobility import contact_schedule
+
+    fl = FLConfig(num_devices=32, rounds=2000, mean_contact=6.0,
+                  mean_intercontact=100.0, seed=3)
+    zeta_l, tau_l = contact_schedule(fl, fl.rounds)
+    prov = ScenarioProvider.from_config(fl)
+    zeta_p, tau_p, h2 = prov.schedule()
+    assert zeta_p.shape == zeta_l.shape and h2.shape == zeta_l.shape
+    assert abs(zeta_p.mean() - zeta_l.mean()) / zeta_l.mean() < 0.1
+    assert (abs(tau_p[zeta_p == 1].mean() - tau_l[zeta_l == 1].mean())
+            / tau_l[zeta_l == 1].mean() < 0.1)
+    # i.i.d. gains follow the WirelessChannel marginal
+    chan = WirelessChannel(seed=100)
+    ref = chan.sample_gain(zeta_l.size)
+    assert abs(np.log10(h2).mean() - np.log10(ref).mean()) < 0.5
+
+
+@pytest.mark.parametrize("name", ["rwp", "gauss_markov", "manhattan", "hotspot"])
+def test_provider_all_models_produce_rounds(name):
+    fl = FLConfig(num_devices=16, rounds=150, mobility_model=name, speed=10.0,
+                  area=600.0, seed=1)
+    zeta, tau, h2 = ScenarioProvider.from_config(fl).schedule()
+    assert zeta.shape == tau.shape == h2.shape == (150, 16)
+    assert zeta.sum() > 0, name  # some contact happens
+    assert ((tau > 0) == (zeta == 1)).all()
+    assert (h2 > 0).all() and np.isfinite(h2).all()
+
+
+def test_provider_static_model_freezes_contacts():
+    """mobility_model='static' -> motionless devices: per-device contact is
+    all-rounds or never, and h2 is constant over time."""
+    fl = FLConfig(num_devices=24, rounds=30, mobility_model="static",
+                  area=300.0, seed=3)
+    zeta, tau, h2 = ScenarioProvider.from_config(fl).schedule()
+    per_dev = zeta.sum(0)
+    assert ((per_dev == 0) | (per_dev == 30)).all()
+    assert per_dev.max() == 30  # area 300 -> someone is inside comm_range
+    np.testing.assert_allclose(h2, np.broadcast_to(h2[0], h2.shape), rtol=1e-6)
+
+
+def test_provider_streaming_round_access():
+    fl = FLConfig(num_devices=4, rounds=20)
+    prov = ScenarioProvider.from_config(fl).prefetch()
+    rows = list(prov)
+    assert len(rows) == len(prov) == 20
+    z0, t0, h0 = prov.round(7)
+    np.testing.assert_array_equal(z0, rows[7][0])
+    np.testing.assert_array_equal(h0, rows[7][2])
+
+
+def test_provider_h2_correlated_within_contact_at_low_speed():
+    """The point of position-coupling: slow devices keep a similar channel
+    across consecutive contact rounds (the i.i.d. shortcut cannot)."""
+    fl = FLConfig(num_devices=32, rounds=400, mobility_model="gauss_markov",
+                  speed=1.0, area=400.0, round_duration=2.0, seed=2)
+    zeta, tau, h2 = ScenarioProvider.from_config(fl).schedule()
+    both = (zeta[1:] == 1) & (zeta[:-1] == 1)
+    assert both.sum() > 50
+    db = 10 * np.log10(h2)
+    diff_contact = np.abs(db[1:] - db[:-1])[both]
+    # i.i.d. resampling baseline: shuffle rounds independently per device
+    rng = np.random.default_rng(0)
+    shuf = np.stack([rng.permutation(db[:, i]) for i in range(db.shape[1])], 1)
+    diff_iid = np.abs(shuf[1:] - shuf[:-1])[both]
+    assert diff_contact.mean() < 0.5 * diff_iid.mean()
+
+
+def test_provider_from_arrays_wraps_legacy_schedule():
+    zeta = np.zeros((10, 3), np.int32)
+    zeta[2, 1] = 1
+    tau = np.where(zeta, 4.0, 0.0).astype(np.float32)
+    prov = ScenarioProvider.from_arrays(zeta, tau, channel=WirelessChannel(seed=2))
+    z, t, h = prov.schedule()
+    np.testing.assert_array_equal(z, zeta)
+    assert h.shape == (10, 3) and (h > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# measure_contact_stats boundary bias (satellite fix)
+# ---------------------------------------------------------------------------
+
+
+def test_contact_stats_drop_truncated_segments():
+    # window truncates the leading contact and the trailing contact
+    x = np.array([1, 1, 0, 0, 0, 1, 1, 1, 1, 0, 0, 1], bool)[:, None]
+    c, g = measure_contact_stats(x, dt=1.0)
+    assert c == 4.0  # only the interior contact counts
+    assert g == 2.5  # interior gaps (3, 2)
+    c_b, g_b = measure_contact_stats(x, dt=1.0, drop_truncated=False)
+    assert c_b < c and g_b <= g  # seed estimator counts the cut pieces
+
+
+def test_contact_stats_bias_on_periodic_truth():
+    """RWP-like near-deterministic durations: window-cut boundary pieces
+    drag the seed estimator below the true mean; censoring removes them."""
+    true_c, true_g = 30, 70
+    period = true_c + true_g
+    rng = np.random.default_rng(0)
+    one_period = np.array([True] * true_c + [False] * true_g)
+    cols = [np.roll(np.tile(one_period, 6), rng.integers(period))[:500]
+            for _ in range(100)]
+    trace = np.stack(cols, axis=1)
+    c_fix, g_fix = measure_contact_stats(trace)
+    c_bias, g_bias = measure_contact_stats(trace, drop_truncated=False)
+    assert c_fix == pytest.approx(true_c)  # interior segments are exact
+    assert g_fix == pytest.approx(true_g)
+    assert c_bias < true_c * 0.97  # cut pieces bias the seed estimator low
+    assert g_bias < true_g * 0.97
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+def test_runner_consumes_trace_scenario():
+    import jax
+
+    from repro.core.runner import run_afl
+    from repro.data import DeviceLoader, SyntheticCifar, dirichlet_partition
+    from repro.models.registry import build_model
+    from repro.configs import get_config
+
+    cfg = get_config("resnet9-cifar10").replace(d_model=4)
+    model = build_model(cfg)
+    fl = FLConfig(num_devices=4, rounds=6, batch_size=8, mobility_model="rwp",
+                  speed=20.0, area=300.0, seed=1)
+    ds = SyntheticCifar(noise=0.3)
+    imgs, labels = ds.make_split(64, seed=1)
+    parts = dirichlet_partition(labels, 4, rho=100.0, seed=1)
+    loader = DeviceLoader(
+        [{"images": imgs[p], "labels": labels[p]} for p in parts], fl.batch_size
+    )
+    ev = dict(zip(("images", "labels"), ds.make_split(32, seed=2)))
+    # pass a caller-built provider so the scenario (incl. its h2) is reused
+    prov = ScenarioProvider.from_config(fl, rounds=6)
+    res = run_afl(model, cfg, fl, "mads", loader, ev, rounds=6, eval_every=6,
+                  schedule=prov)
+    assert len(res.history["eval"]) == 1
+    assert np.isfinite(res.final_eval)
+    # and the default path builds the same scenario internally
+    res2 = run_afl(model, cfg, fl, "mads", loader, ev, rounds=6, eval_every=6)
+    assert np.isfinite(res2.final_eval)
+
+
+def test_distributed_step_consumes_provider():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core.distributed import (
+        DistConfig, init_state, make_afl_train_step, run_afl_rounds,
+    )
+    from repro.core.mads import MadsController
+    from repro.models.registry import build_model, demo_batch
+
+    cfg = get_config("internlm2-1.8b").reduced().replace(num_layers=1)
+    model = build_model(cfg)
+    dcfg = DistConfig(num_clients=4, rounds=8, state_dtype="float32")
+    step = make_afl_train_step(model, cfg, dcfg, MadsController(s=model.num_params()))
+    state = init_state(model, dcfg, jax.random.key(0))
+
+    fl = FLConfig(num_devices=4, rounds=3, mobility_model="manhattan",
+                  speed=15.0, area=400.0, mean_contact=8.0, seed=4)
+    prov = ScenarioProvider.from_config(fl)
+    rng = np.random.default_rng(2)
+    batch = {k: jnp.asarray(v) for k, v in demo_batch(cfg, 8, 16, rng).items()}
+    budgets = jnp.full((4,), 100.0)
+    state2, hist = run_afl_rounds(step, state, prov, lambda r: batch, budgets)
+    assert len(hist) == 3
+    assert int(state2.rnd) == 3
+    assert all(np.isfinite(float(jnp.sum(m["energy"]))) for m in hist)
