@@ -14,6 +14,7 @@ MODULES = [
     ("theory", "benchmarks.bench_theory"),
     ("kernels", "benchmarks.bench_kernels"),
     ("mobility", "benchmarks.bench_mobility"),
+    ("afl", "benchmarks.bench_afl"),
     ("mads", "benchmarks.bench_mads"),
     ("trajectory", "benchmarks.bench_trajectory"),
     ("ablation", "benchmarks.bench_ablation"),

@@ -3,12 +3,19 @@
 This is the harness behind every paper-replication experiment (Figs. 2-11):
 build a federation, pick a policy (MADS or a §VI-B baseline), run R rounds,
 record metrics + periodic global-model evaluation.
+
+Two execution engines share this entry point:
+
+* ``engine="loop"`` — the per-round Python loop below (one jitted
+  ``afl_round`` dispatch per round; easy to instrument).
+* ``engine="scan"`` — ``repro.experiments.scan_engine.run_afl_scanned``:
+  the whole run lowered into one compiled ``lax.scan`` program
+  (metric-equivalent; see tests/test_experiments.py).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +29,10 @@ from repro.utils import get_logger
 
 log = get_logger("repro.runner")
 
+HIST_KEYS = (
+    "round", "eval", "uploads", "k_mean", "energy", "theta_mean", "power_mean"
+)
+
 
 @dataclasses.dataclass
 class RunResult:
@@ -31,38 +42,38 @@ class RunResult:
     state: object
 
 
-def evaluate(model, cfg, params, eval_batch) -> float:
-    """Family-appropriate eval metric on the global model."""
+def make_eval_fn(model, cfg):
+    """Family-appropriate eval metric, jnp-traceable (single source of
+    truth for both engines — the scan engine compiles this same function)."""
     if cfg.family == "vision":
         from repro.models.resnet import accuracy
 
-        return float(accuracy(params, cfg, eval_batch))
+        return lambda p, b: accuracy(p, cfg, b)
     if cfg.family == "trajectory":
         from repro.models.lanegcn import ade, forward
 
-        pred, _ = forward(params, cfg, eval_batch["past"], eval_batch["lanes"])
-        return float(ade(pred, eval_batch["future"]))
-    return float(model.loss_fn(params, cfg, eval_batch))
+        def f(p, b):
+            pred, _ = forward(p, cfg, b["past"], b["lanes"])
+            return ade(pred, b["future"])
+
+        return f
+    return lambda p, b: model.loss_fn(p, cfg, b)
 
 
-def run_afl(
-    model,
-    cfg,
-    fl,
-    policy_name: str,
-    loader,
-    eval_batch,
-    rounds: Optional[int] = None,
-    eval_every: int = 20,
-    seed: Optional[int] = None,
-    schedule=None,
-    log_progress: bool = False,
-) -> RunResult:
-    rounds = rounds or fl.rounds
-    seed = fl.seed if seed is None else seed
-    s = model.num_params()
+def evaluate(model, cfg, params, eval_batch) -> float:
+    """Family-appropriate eval metric on the global model."""
+    return float(make_eval_fn(model, cfg)(params, eval_batch))
 
-    policy = BL.ALL[policy_name](s, fl)
+
+def build_provider(fl, policy_name: str, schedule, rounds: int,
+                   seed: int) -> ScenarioProvider:
+    """Resolve ``schedule`` into a ScenarioProvider, identically for both
+    execution engines (loop and scan) so their round inputs are bit-equal.
+
+    ``schedule`` may be None (scenario from the FLConfig), a ready
+    ScenarioProvider, or legacy (zeta, tau)[+h2] arrays.  The FedMobile
+    relay transform is applied here — it is a schedule-level rewrite.
+    """
     if schedule is None:
         provider = ScenarioProvider.from_config(fl, rounds, seed)
     elif isinstance(schedule, ScenarioProvider):
@@ -77,23 +88,72 @@ def run_afl(
         zeta, tau, h2 = provider.schedule()
         zeta, tau = BL.apply_relays(zeta, tau, seed=seed)
         provider = ScenarioProvider.from_arrays(zeta, tau, h2=h2)
+    return provider
 
+
+def sample_budgets(fl, seed: int) -> jax.Array:
+    """Per-device energy budgets E_n^con (identical across engines)."""
     rng_np = np.random.default_rng(seed + 2)
-    budgets = jnp.asarray(
+    return jnp.asarray(
         rng_np.uniform(*fl.energy_budget, fl.num_devices), jnp.float32
     )
 
-    state = afl_init(model, cfg, fl, jax.random.key(seed))
-    eval_batch = {k: jnp.asarray(v) for k, v in eval_batch.items()}
-    hist: dict = {
-        "round": [], "eval": [], "uploads": [], "k_mean": [], "energy": [],
-        "theta_mean": [], "power_mean": [],
+
+def _round_batch(loader, r: int, shard_key=None):
+    """One stacked (N, B, ...) batch; avoids re-wrapping on-device arrays."""
+    if shard_key is not None:  # DataShard: already device-resident
+        return loader.traced_batch(shard_key, r)
+    batch = loader.sample_all()
+    return {
+        k: v if isinstance(v, jax.Array) else jnp.asarray(v)
+        for k, v in batch.items()
     }
 
-    t0 = time.time()
-    tot_uploads = tot_k = tot_power = 0.0
+
+def run_afl(
+    model,
+    cfg,
+    fl,
+    policy_name: str,
+    loader,
+    eval_batch,
+    rounds: Optional[int] = None,
+    eval_every: int = 20,
+    seed: Optional[int] = None,
+    schedule=None,
+    log_progress: bool = False,
+    engine: str = "loop",
+) -> RunResult:
+    rounds = rounds or fl.rounds
+    seed = fl.seed if seed is None else seed
+
+    if engine == "scan":
+        from repro.experiments.scan_engine import run_afl_scanned
+
+        return run_afl_scanned(
+            model, cfg, fl, policy_name, loader, eval_batch, rounds=rounds,
+            eval_every=eval_every, seed=seed, schedule=schedule,
+            log_progress=log_progress,
+        )
+    if engine != "loop":
+        raise ValueError(f"unknown engine {engine!r}; known: loop, scan")
+
+    s = model.num_params()
+    policy = BL.ALL[policy_name](s, fl)
+    provider = build_provider(fl, policy_name, schedule, rounds, seed)
+    budgets = sample_budgets(fl, seed)
+
+    state = afl_init(model, cfg, fl, jax.random.key(seed))
+    eval_batch = jax.device_put(
+        {k: jnp.asarray(v) for k, v in eval_batch.items()}
+    )
+    hist: dict = {k: [] for k in HIST_KEYS}
+
+    tot_uploads = tot_k = tot_power = tot_theta = 0.0
+    n = fl.num_devices
+    shard_key = loader.seed_key(seed) if hasattr(loader, "seed_key") else None
     for r in range(rounds):
-        batch = {k: jnp.asarray(v) for k, v in loader.sample_all().items()}
+        batch = _round_batch(loader, r, shard_key)
         zeta_r, tau_r, h2_r = provider.round(r)
         state, m = afl_round(
             state, batch, jnp.asarray(zeta_r), jnp.asarray(tau_r),
@@ -103,6 +163,7 @@ def run_afl(
         tot_uploads += float(jnp.sum(m["success"]))
         tot_k += float(jnp.sum(m["k"]))
         tot_power += float(jnp.sum(m["power"]))
+        tot_theta += float(jnp.sum(m["theta"]))
         if (r + 1) % eval_every == 0 or r == rounds - 1:
             ev = evaluate(model, cfg, state.w, eval_batch)
             hist["round"].append(r + 1)
@@ -110,7 +171,7 @@ def run_afl(
             hist["uploads"].append(tot_uploads)  # cumulative
             hist["k_mean"].append(tot_k / max(tot_uploads, 1.0))
             hist["energy"].append(float(jnp.sum(state.energy)))
-            hist["theta_mean"].append(float(jnp.mean(m["theta"])))
+            hist["theta_mean"].append(tot_theta / ((r + 1) * n))
             hist["power_mean"].append(tot_power / max(tot_uploads, 1.0))
             if log_progress:
                 log.info(

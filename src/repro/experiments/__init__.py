@@ -1,0 +1,23 @@
+"""Compiled experiment engine: whole AFL runs as one XLA program, scaled
+across policy x mobility x speed x seed grids (see README.md here)."""
+from repro.experiments.batch import run_seed_batch
+from repro.experiments.grid import ExperimentGrid, GridCell
+from repro.experiments.results import ResultsStore, mean_ci
+from repro.experiments.scan_engine import (
+    DataShard,
+    make_run_fn,
+    prestack_batches,
+    run_afl_scanned,
+)
+
+__all__ = [
+    "DataShard",
+    "ExperimentGrid",
+    "GridCell",
+    "ResultsStore",
+    "make_run_fn",
+    "mean_ci",
+    "prestack_batches",
+    "run_afl_scanned",
+    "run_seed_batch",
+]

@@ -1,0 +1,121 @@
+"""Declarative experiment grids: policies x mobility models x speeds x seeds.
+
+A paper figure is a grid of AFL runs differing only in scenario knobs and
+the upload policy.  ``ExperimentGrid`` enumerates the cells, derives each
+cell's ``FLConfig``, and groups same-shape cells so the batch engine
+(``batch.py``) vmaps the seed axis and reuses one compiled program per
+(model, policy-engine-flags) group — e.g. FedAsync and FedMobile differ
+only in the schedule transform, so every cell of both policies runs through
+the same XLA executable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass, field
+
+from repro.configs import FLConfig
+from repro.core import baselines as BL
+from repro.core.afl import Policy
+
+
+@dataclass(frozen=True)
+class GridCell:
+    """One experiment: a (policy, mobility, speed, seed) point."""
+
+    policy: str
+    mobility: str
+    speed: float
+    seed: int
+
+    @property
+    def key(self) -> str:
+        """Stable slug used by the results store."""
+        return (f"{self.policy}__{self.mobility}__v{self.speed:g}"
+                f"__s{self.seed}")
+
+    @property
+    def group_key(self) -> str:
+        """Slug of the seed-batched group this cell belongs to."""
+        return f"{self.policy}__{self.mobility}__v{self.speed:g}"
+
+
+def engine_policy(policy: Policy) -> Policy:
+    """Strip bookkeeping fields that do not change the compiled program.
+
+    ``Policy.name`` is metadata: two policies whose numeric flags coincide
+    (e.g. ``afl`` and ``fedmobile``) hash equal after stripping, so the
+    scan engine's jit cache serves both from one compile.
+    """
+    return dataclasses.replace(policy, name="")
+
+
+def engine_fl(fl: FLConfig) -> FLConfig:
+    """Project an FLConfig onto the fields the compiled round reads.
+
+    Scenario, channel, and energy knobs (mobility_model, speed, area,
+    bandwidth, energy_budget, seed, ...) are consumed host-side — by
+    ``build_provider``, ``sample_budgets``, and the policy/controller
+    constructors — before anything is compiled.  Keying the jit caches on
+    the full config would recompile an identical XLA program for every
+    speed and mobility model of a sweep; this keeps only what
+    ``afl_round``/``afl_init``/``make_run_fn`` actually consume.
+    """
+    return FLConfig(
+        num_devices=fl.num_devices,
+        rounds=fl.rounds,
+        learning_rate=fl.learning_rate,
+        batch_size=fl.batch_size,
+        sparsifier=fl.sparsifier,
+        sample_size=fl.sample_size,
+    )
+
+
+@dataclass(frozen=True)
+class ExperimentGrid:
+    """The sweep specification behind a paper-style comparison table."""
+
+    policies: tuple = ("mads",)
+    mobility_models: tuple = ("exponential",)
+    speeds: tuple = (0.0,)
+    seeds: tuple = (0,)
+    rounds: int = 200
+    eval_every: int = 20
+    base: FLConfig = field(default_factory=FLConfig)
+
+    def __post_init__(self):
+        unknown = [p for p in self.policies if p not in BL.ALL]
+        if unknown:
+            raise KeyError(f"unknown policies {unknown}; known: "
+                           f"{sorted(BL.ALL)}")
+
+    def cells(self) -> list[GridCell]:
+        return [
+            GridCell(p, m, float(v), int(s))
+            for p, m, v, s in itertools.product(
+                self.policies, self.mobility_models, self.speeds, self.seeds
+            )
+        ]
+
+    def groups(self) -> list[tuple[str, str, float, list[GridCell]]]:
+        """Cells bucketed by (policy, mobility, speed) — the seed axis of
+        each bucket is what ``batch.run_seed_batch`` vmaps."""
+        out = []
+        for p, m, v in itertools.product(
+            self.policies, self.mobility_models, self.speeds
+        ):
+            out.append((p, m, float(v),
+                        [GridCell(p, m, float(v), int(s))
+                         for s in self.seeds]))
+        return out
+
+    def fl_for(self, mobility: str, speed: float) -> FLConfig:
+        """The cell's FLConfig: the base config with scenario knobs set."""
+        return dataclasses.replace(
+            self.base, mobility_model=mobility, speed=float(speed),
+            rounds=self.rounds,
+        )
+
+    def size(self) -> int:
+        return (len(self.policies) * len(self.mobility_models)
+                * len(self.speeds) * len(self.seeds))

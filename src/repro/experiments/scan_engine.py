@@ -1,0 +1,264 @@
+"""Whole-run AFL lowering: the round loop folded into ``lax.scan``.
+
+``core/runner.py::run_afl`` dispatches one jitted ``afl_round`` per round
+from Python, re-hosting minibatches and scenario rows every round.  Here the
+entire R-round run is ONE compiled XLA program:
+
+* the scenario schedule (rounds x N zeta/tau/h2 from
+  ``ScenarioProvider.schedule()``) lives on device and is consumed as scan
+  inputs;
+* minibatches are sampled *inside* the scan from a device-resident
+  ``DataShard`` (``fold_in(key, r)`` so round r's batch is a pure function
+  of the key), or gathered from a prestacked (rounds, N, B, ...) tensor
+  when exact ``DeviceLoader`` parity is required;
+* periodic eval is buffered: the scan is segmented at the eval rounds, and
+  each segment boundary computes the eval metric and the windowed
+  aggregates (uploads, k_mean, theta_mean, power_mean) from carried totals
+  — the history comes back as (num_evals,) device arrays, fetched once.
+
+``run_afl_scanned`` is metric-equivalent to the loop runner on the same
+seeds (tests/test_experiments.py) and is the unit the grid engine
+(``batch.py``) vmaps over seeds.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as BL
+from repro.core.afl import afl_init, afl_round
+from repro.core.runner import (
+    HIST_KEYS,
+    RunResult,
+    build_provider,
+    make_eval_fn,
+    sample_budgets,
+)
+from repro.utils import get_logger
+
+log = get_logger("repro.scan_engine")
+
+
+# ---------------------------------------------------------------------------
+# Batch sources
+# ---------------------------------------------------------------------------
+
+
+class DataShard:
+    """Device-resident federation data with in-scan minibatch sampling.
+
+    Per-device arrays are wrap-padded to a rectangular (N, M, ...) block and
+    pushed to device ONCE; round r's stacked (N, B, ...) minibatch is
+    ``fold_in(key, r)`` + a per-device gather, so sampling is traceable and
+    runs inside the scan (and identically outside it — the loop runner
+    calls ``round_batch(r)`` for engine-equivalence tests).
+
+    Sampling is uniform-with-replacement over each device's true row count
+    (padding rows are never drawn), unlike ``DeviceLoader``'s
+    epoch-permutation semantics — both are unbiased samplers of D_n.
+    """
+
+    def __init__(self, device_arrays: list[dict], batch_size: int,
+                 seed: int = 0):
+        counts = np.array(
+            [len(next(iter(d.values()))) for d in device_arrays], np.int32
+        )
+        m = int(counts.max())
+        self.data = {
+            k: jnp.asarray(np.stack([
+                np.resize(d[k], (m,) + d[k].shape[1:]) for d in device_arrays
+            ]))
+            for k in device_arrays[0]
+        }
+        self.counts = jnp.asarray(counts)
+        self.num_devices = len(device_arrays)
+        self.batch_size = batch_size
+        self.key = jax.random.key(seed)
+
+    def __len__(self):
+        return self.num_devices
+
+    def seed_key(self, seed: int):
+        """Independent sampling stream for one grid seed."""
+        return jax.random.fold_in(self.key, seed)
+
+    def traced_batch(self, key, r):
+        """(N, B, ...) minibatch for round r — jnp-traceable."""
+        kr = jax.random.fold_in(key, r)
+        idx = jax.random.randint(
+            kr, (self.num_devices, self.batch_size), 0, self.counts[:, None]
+        )
+        return jax.tree.map(
+            lambda a: jax.vmap(lambda rows, ii: rows[ii])(a, idx), self.data
+        )
+
+
+
+def prestack_batches(loader, rounds: int):
+    """Materialise ``rounds`` DeviceLoader draws as (rounds, N, B, ...) device
+    arrays — exact loader parity for scanned-vs-loop equivalence."""
+    rows = [loader.sample_all() for _ in range(rounds)]
+    return {
+        k: jnp.asarray(np.stack([row[k] for row in rows])) for k in rows[0]
+    }
+
+
+def _prestacked_sampler(ctx, r):
+    return jax.tree.map(lambda v: v[r], ctx)
+
+
+# ---------------------------------------------------------------------------
+# The compiled run
+# ---------------------------------------------------------------------------
+
+
+def eval_points(rounds: int, eval_every: int) -> list[int]:
+    """1-based round indices at which the loop runner evaluates."""
+    pts = [r for r in range(eval_every, rounds + 1, eval_every)]
+    if not pts or pts[-1] != rounds:
+        pts.append(rounds)
+    return pts
+
+
+def make_run_fn(model, cfg, fl, policy, *, rounds: int, eval_every: int,
+                sampler: Callable):
+    """Pure function running a whole AFL experiment in one trace.
+
+    Returns ``run(state0, zeta, tau, h2, budgets, eval_batch, sample_ctx)
+    -> (final_state, hist)`` where ``hist`` maps the loop runner's history
+    keys (except "round") to (num_evals,) arrays.  ``sampler(sample_ctx, r)``
+    yields round r's stacked minibatch: ``DataShard.traced_batch`` with a
+    key context, or ``_prestacked_sampler`` with a (rounds, ...) tensor.
+
+    The function is jit- and vmap-friendly: scenario tensors, budgets, the
+    initial state, and the sample context batch over a leading seed axis;
+    eval_batch broadcasts.
+    """
+    n = fl.num_devices
+    eval_fn = make_eval_fn(model, cfg)
+    pts = eval_points(rounds, eval_every)
+    bounds = list(zip([0] + pts[:-1], pts))
+
+    def run(state0, zeta, tau, h2, budgets, eval_batch, sample_ctx):
+        def body(carry, xs):
+            state, tot = carry
+            r, zeta_r, tau_r, h2_r = xs
+            batch = sampler(sample_ctx, r)
+            state, m = afl_round(
+                state, batch, zeta_r, tau_r, h2_r, budgets,
+                model=model, cfg=cfg, fl=fl, policy=policy,
+            )
+            tot = {
+                "uploads": tot["uploads"] + jnp.sum(m["success"]),
+                "k": tot["k"] + jnp.sum(m["k"]),
+                "power": tot["power"] + jnp.sum(m["power"]),
+                "theta": tot["theta"] + jnp.sum(m["theta"]),
+            }
+            return (state, tot), None
+
+        state = state0
+        tot = {k: jnp.zeros((), jnp.float32)
+               for k in ("uploads", "k", "power", "theta")}
+        hist = {k: [] for k in HIST_KEYS if k != "round"}
+        for start, stop in bounds:
+            xs = (
+                jnp.arange(start, stop, dtype=jnp.int32),
+                zeta[start:stop], tau[start:stop], h2[start:stop],
+            )
+            (state, tot), _ = jax.lax.scan(body, (state, tot), xs)
+            up = jnp.maximum(tot["uploads"], 1.0)
+            hist["eval"].append(eval_fn(state.w, eval_batch))
+            hist["uploads"].append(tot["uploads"])
+            hist["k_mean"].append(tot["k"] / up)
+            hist["energy"].append(jnp.sum(state.energy))
+            hist["theta_mean"].append(tot["theta"] / (stop * n))
+            hist["power_mean"].append(tot["power"] / up)
+        return state, {k: jnp.stack(v) for k, v in hist.items()}
+
+    return run
+
+
+@lru_cache(maxsize=16)
+def _compiled_run(model, cfg, fl, policy, rounds: int, eval_every: int,
+                  sampler):
+    """One jitted program per (model, engine-flags, shapes) group — grid
+    cells that share these reuse the compilation (policy *names* are
+    stripped by the grid; see ``grid.engine_policy``).
+
+    Note: a DataShard sampler key pins that shard's device data for the
+    cache entry's lifetime — bounded by the maxsize, but long-lived
+    processes cycling many large datasets should prefer fresh processes
+    per sweep."""
+    run = make_run_fn(model, cfg, fl, policy, rounds=rounds,
+                      eval_every=eval_every, sampler=sampler)
+    return jax.jit(run)
+
+
+def run_afl_scanned(
+    model,
+    cfg,
+    fl,
+    policy_name: str,
+    loader,
+    eval_batch,
+    rounds: Optional[int] = None,
+    eval_every: int = 20,
+    seed: Optional[int] = None,
+    schedule=None,
+    log_progress: bool = False,
+    batch_mode: str = "auto",
+) -> RunResult:
+    """Drop-in replacement for ``runner.run_afl`` running the whole
+    experiment as one compiled program.
+
+    ``batch_mode``: "shard" samples in-scan from a ``DataShard``;
+    "prestack" materialises the DeviceLoader's exact draw sequence up
+    front; "auto" picks by loader type.
+    """
+    rounds = rounds or fl.rounds
+    seed = fl.seed if seed is None else seed
+    policy = BL.ALL[policy_name](model.num_params(), fl)
+
+    provider = build_provider(fl, policy_name, schedule, rounds, seed)
+    zeta, tau, h2 = provider.schedule()
+    zeta = jnp.asarray(zeta)
+    tau = jnp.asarray(tau, jnp.float32)
+    h2 = jnp.asarray(h2, jnp.float32)
+    budgets = sample_budgets(fl, seed)
+
+    if batch_mode == "auto":
+        batch_mode = "shard" if isinstance(loader, DataShard) else "prestack"
+    if batch_mode == "shard":
+        sampler, sample_ctx = loader.traced_batch, loader.seed_key(seed)
+    elif batch_mode == "prestack":
+        sampler = _prestacked_sampler
+        sample_ctx = (
+            loader if isinstance(loader, dict)
+            else prestack_batches(loader, rounds)
+        )
+    else:
+        raise ValueError(f"unknown batch_mode {batch_mode!r}")
+
+    from repro.experiments.grid import engine_fl, engine_policy
+
+    run = _compiled_run(model, cfg, engine_fl(fl), engine_policy(policy),
+                        rounds, eval_every, sampler)
+    state0 = afl_init(model, cfg, fl, jax.random.key(seed))
+    eval_b = jax.device_put({k: jnp.asarray(v) for k, v in eval_batch.items()})
+    state, hist_dev = run(state0, zeta, tau, h2, budgets, eval_b, sample_ctx)
+
+    hist: dict = {"round": eval_points(rounds, eval_every)}
+    for k, v in hist_dev.items():
+        hist[k] = [float(x) for x in np.asarray(v)]
+    if log_progress:
+        for i, r in enumerate(hist["round"]):
+            log.info(
+                "policy=%s r=%d eval=%.4f uploads=%.0f k=%.0f E=%.0fJ",
+                policy_name, r, hist["eval"][i], hist["uploads"][i],
+                hist["k_mean"][i], hist["energy"][i],
+            )
+    return RunResult(policy_name, hist, hist["eval"][-1], state)

@@ -33,3 +33,20 @@ def make_test_mesh(*, multi_pod: bool = False):
     shape = (2, 2, 2) if multi_pod else (2, 4)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return _make_mesh(shape, axes)
+
+
+def make_seed_mesh(num_seeds: int):
+    """1-D mesh for the experiment engine's seed axis (repro/experiments).
+
+    Uses the largest device count that divides ``num_seeds`` so the vmapped
+    seed axis shards evenly; returns None on a single device (the vmap
+    alone is the batching there).
+    """
+    from jax.sharding import Mesh
+    import numpy as np
+
+    devs = jax.devices()
+    use = max(k for k in range(1, len(devs) + 1) if num_seeds % k == 0)
+    if use <= 1:
+        return None
+    return Mesh(np.asarray(devs[:use]), ("seed",))

@@ -37,8 +37,13 @@ from repro.utils import get_logger
 log = get_logger("repro.train")
 
 
-def build_federation(cfg, fl, *, train_n=2000, eval_n=512, seq_len=64, seed=0):
-    """Per-family synthetic datasets partitioned across devices."""
+def build_device_data(cfg, fl, *, train_n=2000, eval_n=512, seq_len=64, seed=0):
+    """Per-family synthetic datasets partitioned across devices.
+
+    Returns (per-device array dicts, eval batch) — feed the list to a
+    ``DeviceLoader`` (host sampling) or a ``repro.experiments.DataShard``
+    (device-resident, in-scan sampling).
+    """
     if cfg.family == "vision":
         ds = SyntheticCifar(seed=seed)
         imgs, labels = ds.make_split(train_n, seed=seed + 1)
@@ -59,6 +64,14 @@ def build_federation(cfg, fl, *, train_n=2000, eval_n=512, seq_len=64, seed=0):
         chunks = np.array_split(order, fl.num_devices)
         dev = [{k: v[c] for k, v in data.items()} for c in chunks]
         ev = ds.make_split(eval_n // 4, seq_len, seed=seed + 2)
+    return dev, ev
+
+
+def build_federation(cfg, fl, *, train_n=2000, eval_n=512, seq_len=64, seed=0):
+    """``build_device_data`` wrapped in the host-side DeviceLoader."""
+    dev, ev = build_device_data(
+        cfg, fl, train_n=train_n, eval_n=eval_n, seq_len=seq_len, seed=seed
+    )
     return DeviceLoader(dev, fl.batch_size, seed), ev
 
 
@@ -86,6 +99,9 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--train-n", type=int, default=2000)
     ap.add_argument("--eval-every", type=int, default=20)
+    ap.add_argument("--engine", default="scan", choices=["scan", "loop"],
+                    help="scan: whole run as one compiled lax.scan program "
+                         "(repro/experiments); loop: per-round dispatch")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--workdir", default="runs/train")
     args = ap.parse_args()
@@ -105,11 +121,20 @@ def main() -> None:
     log.info("arch=%s params=%d policy=%s rounds=%d devices=%d",
              cfg.name, model.num_params(), args.policy, args.rounds, args.devices)
 
-    loader, ev = build_federation(
+    dev, ev = build_device_data(
         cfg, fl, train_n=args.train_n, seq_len=args.seq_len, seed=args.seed
     )
+    if args.engine == "scan":
+        # device-resident shard sampled inside the scan; a DeviceLoader
+        # would make the engine prestack every round's batches on device
+        from repro.experiments import DataShard
+
+        loader = DataShard(dev, fl.batch_size, seed=args.seed)
+    else:
+        loader = DeviceLoader(dev, fl.batch_size, args.seed)
     res = run_afl(model, cfg, fl, args.policy, loader, ev,
-                  rounds=args.rounds, eval_every=args.eval_every, log_progress=True)
+                  rounds=args.rounds, eval_every=args.eval_every,
+                  log_progress=True, engine=args.engine)
 
     os.makedirs(args.workdir, exist_ok=True)
     save(args.workdir, args.rounds, res.state.w)

@@ -1,0 +1,180 @@
+"""Compiled experiment engine: scan/loop equivalence, grids, seed-vmap."""
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig, get_config
+from repro.core import baselines as BL
+from repro.core.runner import run_afl
+from repro.data import DeviceLoader
+from repro.experiments import (
+    DataShard,
+    ExperimentGrid,
+    GridCell,
+    ResultsStore,
+    mean_ci,
+    run_afl_scanned,
+    run_seed_batch,
+)
+from repro.experiments.grid import engine_policy
+from repro.experiments.scan_engine import eval_points
+from repro.launch.train import build_device_data
+from repro.models.registry import build_model
+
+ROUNDS, EVERY = 8, 4
+
+
+@pytest.fixture(scope="module")
+def federation():
+    cfg = get_config("resnet9-cifar10").replace(d_model=4)
+    model = build_model(cfg)
+    fl = FLConfig(
+        num_devices=4, rounds=ROUNDS, batch_size=8, learning_rate=0.02,
+        mean_contact=6.0, mean_intercontact=30.0, energy_budget=(40.0, 80.0),
+    )
+    dev, ev = build_device_data(cfg, fl, train_n=160, eval_n=64, seed=0)
+    return cfg, model, fl, dev, ev
+
+
+def _assert_hist_close(a: dict, b: dict):
+    assert a["round"] == b["round"]
+    for k in a:
+        np.testing.assert_allclose(
+            np.asarray(a[k]), np.asarray(b[k]), rtol=2e-4, atol=1e-5,
+            err_msg=f"history key {k!r} diverged",
+        )
+
+
+# ---------------------------------------------------------------------------
+# scan-vs-loop metric equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["mads", "afl"])
+def test_scanned_matches_loop(federation, policy):
+    """Same seeds, same DeviceLoader draws: identical history (float tol)."""
+    cfg, model, fl, dev, ev = federation
+    loop = run_afl(model, cfg, fl, policy, DeviceLoader(dev, fl.batch_size, 0),
+                   ev, rounds=ROUNDS, eval_every=EVERY)
+    scan = run_afl_scanned(model, cfg, fl, policy,
+                           DeviceLoader(dev, fl.batch_size, 0), ev,
+                           rounds=ROUNDS, eval_every=EVERY)
+    _assert_hist_close(loop.history, scan.history)
+
+
+def test_runner_engine_delegation(federation):
+    """run_afl(engine="scan") routes through the compiled engine."""
+    cfg, model, fl, dev, ev = federation
+    shard = DataShard(dev, fl.batch_size, seed=0)
+    a = run_afl(model, cfg, fl, "mads", shard, ev, rounds=ROUNDS,
+                eval_every=EVERY, engine="scan")
+    b = run_afl_scanned(model, cfg, fl, "mads", shard, ev, rounds=ROUNDS,
+                        eval_every=EVERY)
+    _assert_hist_close(a.history, b.history)
+    with pytest.raises(ValueError):
+        run_afl(model, cfg, fl, "mads", shard, ev, engine="warp")
+
+
+@pytest.mark.slow
+def test_scanned_matches_loop_shard_long(federation):
+    """Long-horizon equivalence through the in-scan DataShard sampler —
+    the loop runner draws the identical fold_in(key, r) batches."""
+    cfg, model, fl, dev, ev = federation
+    shard = DataShard(dev, fl.batch_size, seed=0)
+    loop = run_afl(model, cfg, fl, "mads", shard, ev, rounds=30,
+                   eval_every=10, seed=3)
+    scan = run_afl_scanned(model, cfg, fl, "mads", shard, ev, rounds=30,
+                           eval_every=10, seed=3)
+    _assert_hist_close(loop.history, scan.history)
+
+
+def test_theta_mean_accumulates(federation):
+    """hist theta_mean is the cumulative staleness mean, not the last
+    round's snapshot: with sparse contacts it must exceed the round-1
+    value (staleness grows between contacts)."""
+    cfg, model, fl, dev, ev = federation
+    res = run_afl(model, cfg, fl, "mads", DeviceLoader(dev, fl.batch_size, 0),
+                  ev, rounds=ROUNDS, eval_every=EVERY)
+    tm = res.history["theta_mean"]
+    assert all(t >= 1.0 for t in tm)  # theta starts at r - kappa >= 1
+    assert tm[-1] >= tm[0]
+
+
+# ---------------------------------------------------------------------------
+# seed-axis vmap
+# ---------------------------------------------------------------------------
+
+
+def test_seed_vmap_matches_independent(federation):
+    cfg, model, fl, dev, ev = federation
+    shard = DataShard(dev, fl.batch_size, seed=0)
+    batch = run_seed_batch(model, cfg, fl, "mads", shard, ev, seeds=[0, 1],
+                           rounds=ROUNDS, eval_every=EVERY)
+    assert len(batch) == 2
+    for res, seed in zip(batch, (0, 1)):
+        ind = run_afl_scanned(model, cfg, fl, "mads", shard, ev,
+                              rounds=ROUNDS, eval_every=EVERY, seed=seed)
+        _assert_hist_close(ind.history, res.history)
+    # different seeds actually ran different scenarios
+    assert batch[0].history["uploads"] != batch[1].history["uploads"]
+
+
+# ---------------------------------------------------------------------------
+# grid + results store
+# ---------------------------------------------------------------------------
+
+
+def test_grid_cells_groups_and_engine_key():
+    grid = ExperimentGrid(policies=("mads", "afl", "fedmobile"),
+                          speeds=(5.0, 20.0), seeds=(0, 1, 2), rounds=10)
+    assert grid.size() == 3 * 2 * 3 == len(grid.cells())
+    groups = grid.groups()
+    assert len(groups) == 6
+    for policy, mobility, speed, cells in groups:
+        assert [c.seed for c in cells] == [0, 1, 2]
+        assert all(c.policy == policy and c.speed == speed for c in cells)
+    fl = grid.fl_for("rwp", 20.0)
+    assert fl.mobility_model == "rwp" and fl.speed == 20.0
+    # FedAsync and FedMobile share engine flags -> one compiled program
+    s = 1000
+    base = FLConfig()
+    assert engine_policy(BL.ALL["afl"](s, base)) == engine_policy(
+        BL.ALL["fedmobile"](s, base))
+    assert engine_policy(BL.ALL["afl"](s, base)) != engine_policy(
+        BL.ALL["mads"](s, base))
+    with pytest.raises(KeyError):
+        ExperimentGrid(policies=("nope",))
+
+
+def test_results_store_resume(tmp_path):
+    grid = ExperimentGrid(policies=("mads",), speeds=(5.0,), seeds=(0, 1),
+                          rounds=4, eval_every=2)
+    store = ResultsStore(str(tmp_path))
+    cells = grid.cells()
+    hist = {"round": [2, 4], "eval": [0.5, 0.7], "uploads": [1.0, 3.0],
+            "k_mean": [10.0, 12.0], "energy": [1.0, 2.0],
+            "theta_mean": [1.0, 1.5], "power_mean": [0.1, 0.1]}
+    store.save(cells[0], hist, meta={"arch": "tiny"})
+    # completed cell is skipped; the other seed is still pending
+    assert store.done(cells[0]) and not store.done(cells[1])
+    assert store.pending(cells) == [cells[1]]
+    assert store.load(cells[0])["eval"] == [0.5, 0.7]
+    agg = store.aggregate(grid)
+    m, ci, n = agg[("mads", "exponential", 5.0)]
+    assert m == pytest.approx(0.7) and n == 1
+    assert "mads" in store.table(grid)
+    # jsonl index got one line
+    assert len((tmp_path / "results.jsonl").read_text().splitlines()) == 1
+
+
+def test_mean_ci():
+    m, ci = mean_ci([1.0, 1.0, 1.0])
+    assert m == 1.0 and ci == 0.0
+    m, ci = mean_ci([0.0, 1.0])
+    assert m == 0.5 and ci > 0
+    assert mean_ci([2.0]) == (2.0, 0.0)
+
+
+def test_eval_points():
+    assert eval_points(8, 4) == [4, 8]
+    assert eval_points(10, 4) == [4, 8, 10]
+    assert eval_points(3, 20) == [3]
