@@ -1,0 +1,114 @@
+"""Compression subsystem benchmarks (repro/compression).
+
+Two families of rows:
+
+* ``sqef_*`` — the fused sparsify+quantize+EF op vs the naive three-pass
+  jnp pipeline (mask pass, quantise pass, error pass + count reduce) at
+  ResNet-9 size.  CPU wall times are indicative; the HBM-traffic argument
+  (1 read + 2 writes vs 3 reads + 3 writes) is in
+  ``repro/kernels/sparsify_ef.py`` — TPU is the target.
+* ``codec_*`` — accuracy-vs-bits on the synthetic CIFAR federation: the
+  same MADS power policy spending the same contact budgets through each
+  codec (top-k@32, joint (k,b), QSGD, fixed-(k,b)); derived column reports
+  final eval + mean realised upload bits, i.e. the paper-table the joint
+  codec is supposed to win.
+
+``python -m benchmarks.bench_compression --smoke`` shrinks both for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def _three_pass(x, t, step, levels, seed):
+    """The unfused pipeline a naive port would write."""
+    from repro.compression.quant import dither_u01
+
+    mask = jnp.abs(x) >= t                                   # pass 1
+    upload = jnp.where(mask, x, 0.0)
+    u = dither_u01(jnp.asarray(seed), jnp.arange(x.size))    # pass 2
+    upload = jnp.clip(jnp.floor(upload / step + u), -levels, levels) * step
+    upload = jnp.where(mask, upload, 0.0)
+    error = x - upload                                       # pass 3
+    return upload, error, jnp.sum(mask).astype(jnp.float32)  # + reduce
+
+
+def micro_rows(smoke: bool):
+    from repro.kernels.ref import sparsify_quantize_ef_ref
+
+    rng = np.random.default_rng(0)
+    n = 500_000 if smoke else 6_568_650  # ResNet-9 size
+    x = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    args = (x, jnp.float32(0.5), jnp.float32(0.01), jnp.float32(127.0), 7)
+    tag = f"{n/1e6:.1f}M"
+    three = _time(jax.jit(_three_pass), *args)
+    fused = _time(jax.jit(sparsify_quantize_ef_ref), *args)
+    return [
+        csv_row(f"sqef_three_pass_{tag}", three, "impl=jnp_3pass"),
+        csv_row(f"sqef_fused_{tag}", fused,
+                f"impl=fused,speedup={three / max(fused, 1e-9):.2f}x"),
+    ]
+
+
+def codec_rows(smoke: bool):
+    from repro.configs import FLConfig, get_config
+    from repro.experiments import DataShard, run_afl_scanned
+    from repro.launch.train import build_device_data
+    from repro.models.registry import build_model
+
+    cfg = get_config("resnet9-cifar10").replace(d_model=4 if smoke else 8)
+    model = build_model(cfg)
+    rounds = 6 if smoke else 40
+    fl = FLConfig(
+        num_devices=4 if smoke else 8, rounds=rounds, batch_size=8,
+        learning_rate=0.02, mean_contact=2.0, mean_intercontact=30.0,
+        energy_budget=(40.0, 80.0),
+    )
+    dev, ev = build_device_data(cfg, fl, train_n=160 if smoke else 800,
+                                eval_n=64 if smoke else 256, seed=0)
+    shard = DataShard(dev, fl.batch_size, seed=0)
+    rows = []
+    for policy in ("mads", "mads-joint", "qsgd", "fixed-kb"):
+        t0 = time.time()
+        res = run_afl_scanned(model, cfg, fl, policy, shard, ev,
+                              rounds=rounds, eval_every=rounds)
+        us = (time.time() - t0) / rounds * 1e6
+        rows.append(csv_row(
+            f"codec_{policy}", us,
+            f"eval={res.final_eval:.4f},bits_mean={res.history['bits_mean'][-1]:.0f},"
+            f"k_mean={res.history['k_mean'][-1]:.0f}",
+        ))
+    return rows
+
+
+def run(smoke: bool = False):
+    return micro_rows(smoke) + codec_rows(smoke)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: tiny model, few rounds")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ import time
 MODULES = [
     ("theory", "benchmarks.bench_theory"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("compression", "benchmarks.bench_compression"),
     ("mobility", "benchmarks.bench_mobility"),
     ("afl", "benchmarks.bench_afl"),
     ("mads", "benchmarks.bench_mads"),

@@ -6,7 +6,10 @@ policy's three seeds execute as ONE vmapped lax.scan program instead of
 3 x 40 per-round dispatches, and the table reports mean±CI across seeds.
 
 Expected ordering (paper §VI-B): optimal >= mads >= afl-spar >= {afl,
-fedmobile} >> sfl-spar.  Runtime: ~4 minutes on one CPU core.
+fedmobile} >> sfl-spar.  The codec policies (repro/compression) spend the
+same MADS bit budget differently: mads-joint >= mads (more coordinates per
+contact at a few bits each), qsgd degrades when short contacts cannot
+afford dense quantisation.  Runtime: ~5 minutes on one CPU core.
 
     PYTHONPATH=src python examples/cifar_mads_vs_baselines.py
 """
@@ -17,7 +20,8 @@ from repro.data import SyntheticCifar, dirichlet_partition
 from repro.experiments import DataShard, mean_ci, run_seed_batch
 from repro.models.registry import build_model
 
-POLICIES = ["optimal", "mads", "afl-spar", "fedmobile", "afl", "sfl-spar"]
+POLICIES = ["optimal", "mads", "mads-joint", "qsgd", "fixed-kb",
+            "afl-spar", "fedmobile", "afl", "sfl-spar"]
 SEEDS = [0, 1, 2]
 
 
@@ -38,14 +42,17 @@ def main():
     )
     ev = dict(zip(("images", "labels"), ds.make_split(256, seed=2)))
 
-    print(f"{'policy':10s} {'accuracy':>15s} {'uploads':>8s} {'energy(J)':>10s}")
+    print(f"{'policy':10s} {'accuracy':>15s} {'uploads':>8s} {'energy(J)':>10s}"
+          f" {'Mbit/upl':>9s}")
     for pol in POLICIES:
         results = run_seed_batch(model, cfg, fl, pol, shard, ev, seeds=SEEDS,
                                  rounds=fl.rounds, eval_every=fl.rounds)
         acc, ci = mean_ci([r.final_eval for r in results])
         uploads = np.mean([r.history["uploads"][-1] for r in results])
         energy = np.mean([r.history["energy"][-1] for r in results])
-        print(f"{pol:10s} {acc:9.4f}±{ci:<5.4f} {uploads:8.0f} {energy:10.1f}")
+        mbits = np.mean([r.history["bits_mean"][-1] for r in results]) / 1e6
+        print(f"{pol:10s} {acc:9.4f}±{ci:<5.4f} {uploads:8.0f} {energy:10.1f}"
+              f" {mbits:9.2f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,37 @@
+"""Gradient compression under a contact-time bit budget (see base.py).
+
+One contract — ``compress(x, budget_bits, state) -> (payload, state,
+stats)`` — four codecs: top-k (Proposition 1), QSGD-style dense
+quantisation, the closed-form joint (k, b) codec, and a budget-clipped
+fixed-(k, b) baseline.  ``core.afl.Policy.compressor`` wires any of them
+into both execution engines; ``core/README.md`` maps the math.
+"""
+from repro.compression.base import Compressor, CompressorState, init_state
+from repro.compression.joint import JointCompressor, solve_kb
+from repro.compression.qsgd import QSGDCompressor
+from repro.compression.quant import (
+    SCALE_BITS,
+    dither_u01,
+    quant_levels,
+    quant_step,
+    stochastic_round,
+    tree_amax,
+)
+from repro.compression.topk import FixedKbCompressor, TopKCompressor
+
+__all__ = [
+    "Compressor",
+    "CompressorState",
+    "FixedKbCompressor",
+    "JointCompressor",
+    "QSGDCompressor",
+    "SCALE_BITS",
+    "TopKCompressor",
+    "dither_u01",
+    "init_state",
+    "quant_levels",
+    "quant_step",
+    "solve_kb",
+    "stochastic_round",
+    "tree_amax",
+]

@@ -1,0 +1,225 @@
+"""The ``Compressor`` API: spend a contact-time bit budget on a gradient.
+
+The paper's Proposition 1 converts the per-contact budget ``tau * A(p)``
+(seconds x bits/s) into a top-k degree at fixed 32-bit values:
+``k = tau A / (u + log2 s)``.  This subsystem generalises that single knob
+to a family of codecs sharing one contract:
+
+    payload, state, stats = compressor.compress(x, budget_bits, state)
+
+* ``x``           — the fresh signal pytree (the device's accumulated
+                    gradient ``g_n``; the codec adds its error-feedback
+                    memory internally, matching Algorithm 1's
+                    ``S(e_n + g_n)``).
+* ``budget_bits`` — scalar realised contact capacity ``tau * A(p)``.
+* ``state``       — a :class:`CompressorState` pytree: the error-feedback
+                    memory plus a PRNG key for stochastic codecs.  Being a
+                    plain pytree it threads through ``jax.vmap`` (devices)
+                    and ``jax.lax.scan`` (rounds) unchanged.
+* ``payload``     — the dense dequantised upload (what the MES adds);
+                    shapes are static, unselected coordinates are zero.
+* ``stats``       — ``{"k": #selected, "bits": realised payload bits,
+                    "b": value bit-width used}`` scalars; the engines
+                    assert/report ``bits <= budget_bits``.
+
+Implementations (each a frozen dataclass, hashable, usable as a jit static
+argument exactly like ``core.afl.Policy``):
+
+* ``topk.TopKCompressor``    — Proposition 1 at configurable value width.
+* ``topk.FixedKbCompressor`` — budget-clipped fixed (k, b) baseline.
+* ``qsgd.QSGDCompressor``    — quantise-everything, bit-width from budget.
+* ``joint.JointCompressor``  — the (k, b) split solved in closed form
+                                (module docstring has the derivation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression import quant as Q
+from repro.core.sparsify import _strided_sample
+from repro.kernels import ops
+
+
+def strict_threshold(tree, k, *, method: str = "exact", sample: int = 65536):
+    """|x| cutoff whose STRICT-above set has <= floor(k) elements.
+
+    ``core.sparsify.tree_threshold`` returns the k-th order statistic for a
+    ``>=`` mask — under magnitude ties (near-certain for bf16 gradients,
+    whose 8-bit mantissa collapses values onto buckets) that mask selects
+    the *whole* tied bucket and can wildly overshoot k.  The codecs instead
+    take the (k+1)-th order statistic bumped one ulp, so the shared
+    ``>=``-mask kernels implement ``> t``: with distinct magnitudes this
+    selects exactly floor(k) elements (the same set as top-k), and ties can
+    only UNDERSHOOT — making ``bits <= budget`` provable in exact mode
+    rather than gated.  k >= s selects everything; k < 1 selects nothing.
+    """
+    leaves = jax.tree.leaves(tree)
+    s = sum(l.size for l in leaves)
+    kf = jnp.asarray(k, jnp.float32)
+    if method == "exact":
+        flat = jnp.concatenate(
+            [jnp.abs(l.astype(jnp.float32)).reshape(-1) for l in leaves])
+        srt = jnp.sort(flat)[::-1]
+        idx = jnp.clip(jnp.floor(kf).astype(jnp.int32), 0, s - 1)
+    else:
+        m_per = [max(int(sample * l.size / s), 16) for l in leaves]
+        flat = jnp.concatenate(
+            [_strided_sample(l, m) for l, m in zip(leaves, m_per)])
+        srt = jnp.sort(flat)[::-1]
+        frac = jnp.clip(kf / float(s), 0.0, 1.0)
+        idx = jnp.clip(jnp.floor(frac * flat.size).astype(jnp.int32),
+                       0, flat.size - 1)
+    t = jnp.where(kf < 1.0, jnp.inf,
+                  jnp.where(kf >= float(s), -jnp.inf, srt[idx]))
+    return jnp.nextafter(t, jnp.inf)
+
+
+class CompressorState(NamedTuple):
+    """Codec state threaded through scan/vmap as a pytree.
+
+    ``error``: error-feedback memory, same structure as the signal
+    (Stich-style: residuals re-enter the next round's signal).
+    ``key``: jax PRNG key advancing once per compress call (dither seeds).
+    """
+
+    error: Any
+    key: jax.Array
+
+
+def init_state(tree, key) -> CompressorState:
+    """Zeroed error memory + the given PRNG key."""
+    return CompressorState(
+        error=jax.tree.map(jnp.zeros_like, tree), key=key
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base codec: bit accounting constants + the error-feedback frame.
+
+    ``s`` is the flat model size; every selected coordinate pays
+    ``index_bits = ceil(log2 s)`` of position overhead on the wire
+    (paper eq. 7c).  ``method``/``sample`` select the thresholding mode of
+    ``core.sparsify`` (exact sort vs strided sample).
+    """
+
+    s: int
+    method: str = "exact"
+    sample: int = 65536
+    error_feedback: bool = True
+
+    @property
+    def index_bits(self) -> int:
+        return int(math.ceil(math.log2(max(self.s, 2))))
+
+    # -- shared plumbing ----------------------------------------------------
+
+    def combined(self, x, state: CompressorState):
+        """x + error memory: the signal Algorithm 1 actually compresses."""
+        return jax.tree.map(jnp.add, x, state.error)
+
+    def next_state(self, error, state: CompressorState) -> CompressorState:
+        """Advance the codec state with the EF residual produced alongside
+        the payload (the fused op emits it in the same pass)."""
+        if not self.error_feedback:
+            error = jax.tree.map(jnp.zeros_like, error)
+        return CompressorState(error=error,
+                               key=jax.random.fold_in(state.key, 0))
+
+    def dither_seed(self, state: CompressorState):
+        """Per-call scalar dither seed (round/device-unique via the key)."""
+        return Q.seed_from_key(state.key)
+
+    def masked_payload(self, xt, t, *, quantize: bool, step=None, levels=None,
+                       seed=None):
+        """(payload, error, k_actual) across leaves under a global |x|
+        threshold ``t``.
+
+        ``quantize=False`` keeps raw values (bit-exact with
+        ``core.sparsify.sparsify_tree``); ``quantize=True`` routes each
+        leaf through the fused sparsify+quantize+EF op (Pallas on TPU, jnp
+        oracle elsewhere — same selections either way, see
+        ``compression.quant``).  The error tree comes out of the same
+        pass; callers must not recompute it.
+        """
+        leaves, treedef = jax.tree.flatten(xt)
+        ups, errs, count, base = [], [], jnp.float32(0.0), 0
+        for leaf in leaves:
+            if quantize:
+                up, err, c = ops.sparsify_quantize_ef(
+                    leaf, t, step, levels, seed, base=base
+                )
+            else:
+                up, err, c = ops.sparsify_ef(leaf.reshape(-1), t)
+                up = up.reshape(leaf.shape)
+                err = err.reshape(leaf.shape)
+            ups.append(up)
+            errs.append(err)
+            count = count + c
+            base += leaf.size
+        return (jax.tree.unflatten(treedef, ups),
+                jax.tree.unflatten(treedef, errs), count)
+
+    def spend(self, xt, k_target, b, budget_bits, state: CompressorState,
+              *, quantize: bool):
+        """Threshold at ~k_target, ship ``b``-bit values, bill the wire.
+
+        The shared second half of every thresholding codec: global
+        strict-above threshold (``strict_threshold`` — tie-immune, so
+        exact mode can never overshoot floor(k_target)), fused
+        payload/error/count, bit accounting ``k (b + log2 s) + scale``,
+        and the budget gate: an upload whose realised bits would exceed
+        the budget is withheld entirely (all-or-nothing, like the paper's
+        full-upload baselines) and the EF memory keeps the round's mass
+        for the next contact.  This makes ``stats["bits"] <= budget_bits``
+        an invariant of every codec — provable in exact mode, gated under
+        the ``sampled`` threshold estimate, whose count error makes the
+        gate reachable.  So that it stays the exception, sampled mode
+        first backs the target off by three standard errors of the
+        m-sample quantile count (std of the realised k ~ sqrt(k s / m),
+        the binomial error of the ~k m / s sample points above the
+        threshold), capped at half the affordable k so short contacts
+        still ship at reduced capacity instead of not at all.
+        """
+        if self.method == "sampled":
+            m = float(min(self.sample, self.s))
+            rel = jnp.minimum(
+                3.0 * jnp.sqrt(float(self.s)
+                               / (jnp.maximum(k_target, 1.0) * m)),
+                0.5,
+            )
+            k_target = jnp.floor(jnp.maximum(k_target * (1.0 - rel), 0.0))
+        t = strict_threshold(xt, k_target, method=self.method,
+                             sample=self.sample)
+        if quantize:
+            levels = Q.quant_levels(b)
+            step = Q.quant_step(Q.tree_amax(xt), levels)
+            payload, error, k_actual = self.masked_payload(
+                xt, t, quantize=True, step=step, levels=levels,
+                seed=self.dither_seed(state),
+            )
+            overhead = Q.SCALE_BITS
+        else:
+            payload, error, k_actual = self.masked_payload(
+                xt, t, quantize=False)
+            overhead = 0
+        bits = k_actual * (b + self.index_bits) + overhead * (k_actual > 0)
+        feasible = (bits <= budget_bits).astype(jnp.float32)
+        payload = jax.tree.map(
+            lambda p: (p * feasible).astype(p.dtype), payload)
+        error = jax.tree.map(
+            lambda e, x_: jnp.where(feasible > 0, e, x_), error, xt)
+        k_actual = k_actual * feasible
+        stats = {"k": k_actual, "bits": bits * feasible,
+                 "b": jnp.asarray(b, jnp.float32) * (k_actual > 0)}
+        return payload, self.next_state(error, state), stats
+
+    # -- the contract -------------------------------------------------------
+
+    def compress(self, x, budget_bits, state: CompressorState):
+        raise NotImplementedError

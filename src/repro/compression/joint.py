@@ -1,0 +1,85 @@
+"""Joint sparsify-then-quantize codec: the (k, b) split in closed form.
+
+The MADS budget (Proposition 1) is ``B = tau * A(p)`` bits.  Spending it on
+``k`` coordinates at ``b``-bit values costs
+
+    B  >=  k * (b + lambda) + 32,        lambda = ceil(log2 s),
+
+(the 32 is the fp32 scale) so the keep-fraction at bit-width ``b`` is
+
+    kappa(b) = min(1, (B - 32) / (s * (b + lambda))).
+
+**Distortion model.**  Top-k keeps at least a ``kappa`` fraction of the
+signal energy (the random-k lower bound; magnitude selection only does
+better), and ``b``-bit stochastic rounding onto the ``2^(b-1)-1``-level
+grid leaves a noise fraction
+
+    eps(b) = 4^{-(b-1)} / 3
+
+of the kept energy (uniform-value estimate: step ``delta = amax/levels``,
+per-coordinate MSE ``delta^2/12`` against mean-square value ``amax^2/3``).
+Relative end-to-end distortion is then
+
+    D(b) = 1 - kappa(b) * (1 - eps(b)),
+
+so the optimal width maximises the "useful energy per bit" score
+
+    b* = argmax_b  kappa(b) * (1 - eps(b)).
+
+The two limits behave correctly: as ``b -> infinity`` kappa shrinks like
+``1/b`` (all budget burnt on precision), as ``b -> b_min`` eps blows up
+(all budget on coordinates nobody can decode accurately); the maximiser
+sits at a few bits — and because ``kappa`` saturates at 1 for large
+budgets, ``b*`` automatically grows toward ``b_max`` when the window is
+long enough to ship everything.
+
+**Closed form.**  D(b) is evaluated on the static integer grid ``b_grid``
+in one vectorised expression and argmax'd — no iteration, no data
+dependence (the split is a pure function of the budget), so the selection
+costs a handful of FLOPs inside the jitted round and one compiled program
+serves every contact length.  With ``b*`` fixed, the spend is Proposition 1
+again at the new per-coordinate cost:
+
+    k* = floor((B - 32) / (b* + lambda)),   clipped to [0, s].
+
+Replacing the fixed ``u = 32`` of ``core.sparsify.bits_for_k`` with
+``b* + lambda`` buys ``(32 + lambda)/(b* + lambda)`` x more coordinates per
+contact window; the error-feedback memory absorbs the added quantisation
+residual (``base.CompressorState``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.compression import quant as Q
+from repro.compression.base import Compressor, CompressorState
+
+
+def solve_kb(budget_bits, s: int, index_bits: int, b_grid):
+    """Closed-form (k, b) split for one budget (traced-friendly).
+
+    Returns (k_target, b): ``b`` maximises ``kappa(b) * (1 - eps(b))`` over
+    the static grid, ``k_target = floor((B - 32)/(b + lambda))`` in [0, s].
+    """
+    bg = jnp.asarray(b_grid, jnp.float32)
+    avail = jnp.maximum(budget_bits - Q.SCALE_BITS, 0.0)
+    kappa = jnp.clip(avail / (float(s) * (bg + index_bits)), 0.0, 1.0)
+    eps = (4.0 ** (-(bg - 1.0))) / 3.0
+    b = bg[jnp.argmax(kappa * (1.0 - eps))]
+    k = jnp.floor(jnp.clip(avail / (b + index_bits), 0.0, float(s)))
+    return k, b
+
+
+@dataclasses.dataclass(frozen=True)
+class JointCompressor(Compressor):
+    """MADS-joint: per-round (k*, b*) from the contact budget."""
+
+    b_grid: tuple = tuple(range(2, 17))
+
+    def compress(self, x, budget_bits, state: CompressorState):
+        xt = self.combined(x, state)
+        k_target, b = solve_kb(budget_bits, self.s, self.index_bits,
+                               self.b_grid)
+        return self.spend(xt, k_target, b, budget_bits, state, quantize=True)

@@ -1,0 +1,50 @@
+"""QSGD-style quantise-everything codec: bit-width traced from the budget.
+
+No sparsification and therefore no per-coordinate index overhead: all ``s``
+coordinates ship at ``b = floor((budget - 32) / s)`` bits each (the 32 pays
+the fp32 scale), stochastically rounded onto the ``2^(b-1)-1``-level grid
+(``compression.quant``).  When the contact window cannot afford ``b_min``
+bits per coordinate the device sends nothing — dense quantisation degrades
+ungracefully under short contacts, which is exactly the regime where the
+joint (k, b) codec wins (see ``joint.py``).
+
+``b`` is a *traced* value: the same compiled program serves every contact
+duration, with the bit-width resolved per device per round inside the jitted
+AFL round — no recompilation across budgets.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression import quant as Q
+from repro.compression.base import Compressor, CompressorState
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGDCompressor(Compressor):
+    b_min: int = 2
+    b_max: int = 16
+
+    def compress(self, x, budget_bits, state: CompressorState):
+        xt = self.combined(x, state)
+        b = jnp.floor((budget_bits - Q.SCALE_BITS) / self.s)
+        b = jnp.clip(b, 0.0, float(self.b_max))
+        send = (b >= self.b_min).astype(jnp.float32)
+        b = b * send
+        levels = Q.quant_levels(b)
+        step = Q.quant_step(Q.tree_amax(xt), levels)
+        # threshold 0 selects every coordinate; send=0 withholds the round
+        payload, error, _ = self.masked_payload(
+            xt, jnp.float32(0.0), quantize=True, step=step, levels=levels,
+            seed=self.dither_seed(state),
+        )
+        payload = jax.tree.map(lambda p: (p * send).astype(p.dtype), payload)
+        error = jax.tree.map(
+            lambda e, x_: jnp.where(send > 0, e, x_), error, xt)
+        # bits <= budget by construction: b = floor((budget - 32) / s)
+        bits = send * (float(self.s) * b + Q.SCALE_BITS)
+        stats = {"k": send * float(self.s), "bits": bits, "b": b}
+        return payload, self.next_state(error, state), stats

@@ -1,0 +1,64 @@
+"""Top-k codecs: Proposition 1 spending, plus the fixed-(k, b) baseline.
+
+``TopKCompressor`` is MADS's original spend generalised to a configurable
+value width ``u``: the budget buys ``k = floor(budget / (u + log2 s))``
+coordinates, selected by a global tie-immune magnitude threshold
+(``base.strict_threshold``) and transmitted as ``u``-bit values
+(raw floats at u=32, stochastically quantised below).  ``FixedKbCompressor``
+ignores the budget for its *targets* — a fixed keep-fraction and bit-width
+— but clips k to what the contact window can actually carry, so realised
+bits never exceed the budget (the honest version of a fixed-rate baseline
+under mobility).  Both delegate thresholding, bit accounting, and the
+budget gate to ``base.Compressor.spend``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.compression import quant as Q
+from repro.compression.base import Compressor, CompressorState
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor(Compressor):
+    """Sparsify-only spend: ``k = floor(budget / (u + log2 s))``."""
+
+    u: int = 32  # value bit-width on the wire
+
+    def compress(self, x, budget_bits, state: CompressorState):
+        xt = self.combined(x, state)
+        quantize = self.u < 32
+        overhead = Q.SCALE_BITS if quantize else 0
+        k_target = jnp.floor(jnp.clip(
+            (budget_bits - overhead) / (self.u + self.index_bits),
+            0.0, float(self.s),
+        ))
+        return self.spend(xt, k_target, self.u, budget_bits, state,
+                          quantize=quantize)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedKbCompressor(Compressor):
+    """Fixed (keep-fraction, bit-width) targets, clipped to the budget.
+
+    The classic static-rate baseline: it neither adapts k to the contact
+    window (wasting capacity on long contacts) nor b to the budget
+    (starving k on short ones) — the ablation the joint codec beats.
+    """
+
+    k_frac: float = 0.01
+    b: int = 8
+
+    def compress(self, x, budget_bits, state: CompressorState):
+        xt = self.combined(x, state)
+        quantize = self.b < 32
+        overhead = Q.SCALE_BITS if quantize else 0
+        k_cap = jnp.floor(jnp.clip(
+            (budget_bits - overhead) / (self.b + self.index_bits),
+            0.0, float(self.s),
+        ))
+        k_target = jnp.minimum(jnp.floor(self.k_frac * self.s), k_cap)
+        return self.spend(xt, k_target, self.b, budget_bits, state,
+                          quantize=quantize)

@@ -185,6 +185,12 @@ class FLConfig:
     # sparsification
     sparsifier: str = "exact"  # exact | sampled
     sample_size: int = 65536
+    # compression codecs (repro/compression; host-side — consumed by the
+    # baselines.* policy factories, not by the compiled round)
+    compress_b_min: int = 2  # smallest usable value bit-width
+    compress_b_max: int = 16  # largest value bit-width the codecs consider
+    fixed_k_frac: float = 0.01  # fixed-kb baseline: keep-fraction target
+    fixed_bits: int = 8  # fixed-kb baseline: value bit-width
     # non-iid
     dirichlet_rho: float = 0.5
     seed: int = 0

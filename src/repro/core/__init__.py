@@ -7,7 +7,11 @@ Submodules:
   mads         Algorithm 2 — Lyapunov-controlled k/p (Propositions 1-2)
   theory       Lemmas 2-4 / Theorems 1-2 / Corollary 1 closed forms
   baselines    SFL-Spar, FedAsync, AFL-Spar, FedMobile, Optimal (§VI-B)
+               + compression-codec policies (mads-joint, qsgd, fixed-kb)
   distributed  pjit AFL train step for the assigned architectures
+
+See README.md in this directory for the paper-symbol -> code table and
+how the repro/compression subsystem plugs into the round.
 """
 from repro.core.sparsify import (
     bits_for_k,

@@ -18,6 +18,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.compression.base import Compressor, CompressorState
 from repro.core import mads as M
 from repro.core import sparsify as SP
 from repro.core.mads import MadsController
@@ -32,6 +33,7 @@ class AflState(NamedTuple):
     q: jax.Array  # (N,) virtual energy queues
     energy: jax.Array  # (N,) cumulative energy spent
     rnd: jax.Array  # scalar round index r
+    ckey: jax.Array  # PRNG key for stochastic codecs (repro/compression)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +48,9 @@ class Policy:
     train_every_round: bool = True  # False: gradient only at contact (SFL)
     energy_capped: bool = False  # hard stop when budget exhausted (AFL/AFL-Spar)
     fixed_power: float = 0.0  # >0: transmit at this power (non-MADS baselines)
+    # None -> the seed top-k-at-32-bit path below; a repro.compression codec
+    # replaces the sparsify/quantize stage and spends tau*A(p) bits itself
+    compressor: Compressor | None = None
 
     def select(self, ctl: MadsController, zeta, theta, x_norm2, q, tau, h2):
         if self.controller is not None and self.fixed_power <= 0:
@@ -88,6 +93,7 @@ def afl_init(model, cfg, fl, rng) -> AflState:
         q=jnp.zeros((n,), jnp.float32),
         energy=jnp.zeros((n,), jnp.float32),
         rnd=jnp.zeros((), jnp.int32),
+        ckey=jax.random.fold_in(rng, 0x5EED),
     )
 
 
@@ -127,19 +133,40 @@ def afl_round(state: AflState, batch, zeta, tau, h2, energy_budget,
         ok = ok & (state.energy + energy <= energy_budget)
     k = k * ok
     energy = energy * ok
+    okf = ok.astype(jnp.float32)
 
-    # --- sparsification with error feedback --------------------------------
-    upload, e_after, k_actual = jax.vmap(
-        lambda t, kk: SP.sparsify_tree(t, kk, method=fl.sparsifier, sample=fl.sample_size)
-    )(x, k)
-    if ctl.u < 32:  # quantized wire format: EF absorbs the residual too
-        upload_q = jax.vmap(lambda t: SP.quantize_values(t, ctl.u))(upload)
-        e_after = jax.tree.map(lambda e, u, uq: e + (u - uq), e_after, upload, upload_q)
-        upload = upload_q
+    # --- compression with error feedback -----------------------------------
+    if policy.compressor is not None:
+        # codec path: the budget is the realised contact capacity tau*A(p)
+        # (Proposition 1's left-hand side); the codec decides how to spend
+        # it (k, b, or both) and returns the EF residual as its state
+        comp = policy.compressor
+        rate = M.rate_bps(p, h2, ctl.bandwidth, ctl.noise_w_hz)
+        budget_bits = tau * rate * okf
+        ckey, sub = jax.random.split(state.ckey)
+        dev_keys = jax.random.split(sub, n)
+        upload, cstate, cstats = jax.vmap(comp.compress)(
+            g_new, budget_bits, CompressorState(error=state.e_n, key=dev_keys)
+        )
+        e_after = cstate.error
+        k_actual = cstats["k"]
+        bits = cstats["bits"] * okf
+        b_used = cstats["b"] * okf
+    else:
+        # seed path: top-k at fixed ctl.u-bit values (paper §III-D)
+        ckey = state.ckey
+        upload, e_after, k_actual = jax.vmap(
+            lambda t, kk: SP.sparsify_tree(t, kk, method=fl.sparsifier, sample=fl.sample_size)
+        )(x, k)
+        if ctl.u < 32:  # quantized wire format: EF absorbs the residual too
+            upload_q = jax.vmap(lambda t: SP.quantize_values(t, ctl.u))(upload)
+            e_after = jax.tree.map(lambda e, u, uq: e + (u - uq), e_after, upload, upload_q)
+            upload = upload_q
+        bits = SP.bits_for_k(k_actual, ctl.s, ctl.u) * okf
+        b_used = jnp.full_like(k_actual, float(ctl.u)) * okf
     if not policy.error_feedback:
         e_after = jax.tree.map(jnp.zeros_like, e_after)
 
-    okf = ok.astype(jnp.float32)
     # --- MES aggregation: w <- w - (1/N) sum zeta S(x_n) --------------------
     w_new = jax.tree.map(
         lambda w, up: (
@@ -172,9 +199,12 @@ def afl_round(state: AflState, batch, zeta, tau, h2, energy_budget,
         "uploads": okf,
         "x_norm2": x_norm2,
         "queue": q_new,
+        "bits": bits,  # realised upload payload (<= tau*A budget; eq. 7c)
+        "b": b_used,  # value bit-width on the wire (u, or the codec's b*)
     }
     new_state = AflState(
         w=w_new, w_n=w_n_new, g_n=g_n_new, e_n=e_n_new,
         kappa=kappa_new, q=q_new, energy=state.energy + energy, rnd=r,
+        ckey=ckey,
     )
     return new_state, metrics

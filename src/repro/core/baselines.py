@@ -13,11 +13,27 @@
 5. Optimal    — MADS structure without energy constraints (max feasible
                 power, k filling the window) — the paper's upper benchmark.
 6. MADS       — the proposed controller (Propositions 1-2 + queues).
+
+Compression-codec policies (beyond-paper; repro/compression): all use the
+MADS power controller, so ONLY the codec differs — an apples-to-apples
+comparison of how the same tau*A(p) bit budget is spent:
+
+7. MADS-joint — sparsify x quantize, (k, b) split solved in closed form
+                per round (`compression.joint`).
+8. QSGD       — quantise-everything, bit-width from the budget; no
+                sparsification (`compression.qsgd`).
+9. fixed-kb   — static (keep-fraction, bit-width) targets clipped to the
+                budget (`compression.topk.FixedKbCompressor`).
 """
 from __future__ import annotations
 
 import numpy as np
 
+from repro.compression import (
+    FixedKbCompressor,
+    JointCompressor,
+    QSGDCompressor,
+)
 from repro.core.afl import Policy
 from repro.core.mads import MadsController
 
@@ -109,6 +125,41 @@ def apply_relays(zeta: np.ndarray, tau: np.ndarray, p_relay: float = 0.3,
     return zeta, tau
 
 
+def mads_joint(s: int, fl) -> Policy:
+    """MADS power + the closed-form joint (k, b) codec."""
+    return Policy(
+        name="mads-joint",
+        controller=_controller(s, fl),
+        compressor=JointCompressor(
+            s=s, method=fl.sparsifier, sample=fl.sample_size,
+            b_grid=tuple(range(fl.compress_b_min, fl.compress_b_max + 1)),
+        ),
+    )
+
+
+def qsgd(s: int, fl) -> Policy:
+    """MADS power + dense stochastic quantisation (no sparsification)."""
+    return Policy(
+        name="qsgd",
+        controller=_controller(s, fl),
+        compressor=QSGDCompressor(
+            s=s, b_min=fl.compress_b_min, b_max=fl.compress_b_max,
+        ),
+    )
+
+
+def fixed_kb(s: int, fl) -> Policy:
+    """MADS power + static (k, b) targets clipped to the contact budget."""
+    return Policy(
+        name="fixed-kb",
+        controller=_controller(s, fl),
+        compressor=FixedKbCompressor(
+            s=s, method=fl.sparsifier, sample=fl.sample_size,
+            k_frac=fl.fixed_k_frac, b=fl.fixed_bits,
+        ),
+    )
+
+
 def mads_no_ef(s: int, fl) -> Policy:
     """Ablation: MADS without the error-feedback memory (dropped residuals).
 
@@ -128,4 +179,7 @@ ALL = {
     "sfl-spar": sfl_spar,
     "fedmobile": fedmobile,
     "mads-noef": mads_no_ef,
+    "mads-joint": mads_joint,
+    "qsgd": qsgd,
+    "fixed-kb": fixed_kb,
 }

@@ -30,7 +30,8 @@ from repro.utils import get_logger
 log = get_logger("repro.runner")
 
 HIST_KEYS = (
-    "round", "eval", "uploads", "k_mean", "energy", "theta_mean", "power_mean"
+    "round", "eval", "uploads", "k_mean", "energy", "theta_mean",
+    "power_mean", "bits_mean"
 )
 
 
@@ -149,7 +150,7 @@ def run_afl(
     )
     hist: dict = {k: [] for k in HIST_KEYS}
 
-    tot_uploads = tot_k = tot_power = tot_theta = 0.0
+    tot_uploads = tot_k = tot_power = tot_theta = tot_bits = 0.0
     n = fl.num_devices
     shard_key = loader.seed_key(seed) if hasattr(loader, "seed_key") else None
     for r in range(rounds):
@@ -164,6 +165,7 @@ def run_afl(
         tot_k += float(jnp.sum(m["k"]))
         tot_power += float(jnp.sum(m["power"]))
         tot_theta += float(jnp.sum(m["theta"]))
+        tot_bits += float(jnp.sum(m["bits"]))
         if (r + 1) % eval_every == 0 or r == rounds - 1:
             ev = evaluate(model, cfg, state.w, eval_batch)
             hist["round"].append(r + 1)
@@ -173,6 +175,7 @@ def run_afl(
             hist["energy"].append(float(jnp.sum(state.energy)))
             hist["theta_mean"].append(tot_theta / ((r + 1) * n))
             hist["power_mean"].append(tot_power / max(tot_uploads, 1.0))
+            hist["bits_mean"].append(tot_bits / max(tot_uploads, 1.0))
             if log_progress:
                 log.info(
                     "policy=%s r=%d eval=%.4f uploads=%.0f k=%.0f E=%.0fJ",

@@ -125,24 +125,30 @@ def _strided_sample(leaf, m: int):
     return jnp.abs(block.astype(jnp.float32)).reshape(-1)
 
 
-def sparsify_tree(tree, k, *, method: str = "exact", sample: int = 65536):
-    """Tree-level S(x): one GLOBAL magnitude threshold across all leaves
-    (the paper treats x_n as one flat vector)."""
-    leaves, treedef = jax.tree.flatten(tree)
+def tree_threshold(tree, k, *, method: str = "exact", sample: int = 65536):
+    """GLOBAL |x| threshold across all leaves such that ~k elements pass
+    (the paper treats x_n as one flat vector).  k may be traced."""
+    leaves = jax.tree.leaves(tree)
     sizes = [l.size for l in leaves]
     s = sum(sizes)
     if method == "exact":
         flat = jnp.concatenate([jnp.abs(l.astype(jnp.float32)).reshape(-1) for l in leaves])
-        t = threshold_for_k(flat, k, method="exact")
-    else:
-        m_per = [max(int(sample * sz / s), 16) for sz in sizes]
-        flat = jnp.concatenate(
-            [_strided_sample(l, m) for l, m in zip(leaves, m_per)]
-        )
-        frac = jnp.clip(jnp.asarray(k, jnp.float32) / float(s), 0.0, 1.0)
-        srt = jnp.sort(flat)[::-1]
-        idx = jnp.clip(jnp.floor(frac * flat.size).astype(jnp.int32) - 1, 0, flat.size - 1)
-        t = jnp.where(jnp.asarray(k, jnp.float32) < 1.0, jnp.inf, srt[idx])
+        return threshold_for_k(flat, k, method="exact")
+    m_per = [max(int(sample * sz / s), 16) for sz in sizes]
+    flat = jnp.concatenate(
+        [_strided_sample(l, m) for l, m in zip(leaves, m_per)]
+    )
+    frac = jnp.clip(jnp.asarray(k, jnp.float32) / float(s), 0.0, 1.0)
+    srt = jnp.sort(flat)[::-1]
+    idx = jnp.clip(jnp.floor(frac * flat.size).astype(jnp.int32) - 1, 0, flat.size - 1)
+    return jnp.where(jnp.asarray(k, jnp.float32) < 1.0, jnp.inf, srt[idx])
+
+
+def sparsify_tree(tree, k, *, method: str = "exact", sample: int = 65536):
+    """Tree-level S(x): one global magnitude threshold across all leaves
+    (see ``tree_threshold``)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    t = tree_threshold(tree, k, method=method, sample=sample)
     ups, errs, ks = [], [], []
     for l in leaves:
         mask = jnp.abs(l.astype(jnp.float32)) >= t

@@ -157,12 +157,13 @@ def make_run_fn(model, cfg, fl, policy, *, rounds: int, eval_every: int,
                 "k": tot["k"] + jnp.sum(m["k"]),
                 "power": tot["power"] + jnp.sum(m["power"]),
                 "theta": tot["theta"] + jnp.sum(m["theta"]),
+                "bits": tot["bits"] + jnp.sum(m["bits"]),
             }
             return (state, tot), None
 
         state = state0
         tot = {k: jnp.zeros((), jnp.float32)
-               for k in ("uploads", "k", "power", "theta")}
+               for k in ("uploads", "k", "power", "theta", "bits")}
         hist = {k: [] for k in HIST_KEYS if k != "round"}
         for start, stop in bounds:
             xs = (
@@ -177,6 +178,7 @@ def make_run_fn(model, cfg, fl, policy, *, rounds: int, eval_every: int,
             hist["energy"].append(jnp.sum(state.energy))
             hist["theta_mean"].append(tot["theta"] / (stop * n))
             hist["power_mean"].append(tot["power"] / up)
+            hist["bits_mean"].append(tot["bits"] / up)
         return state, {k: jnp.stack(v) for k, v in hist.items()}
 
     return run

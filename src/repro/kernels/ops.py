@@ -28,6 +28,26 @@ def sparsify_ef(x, threshold, *, impl: str = "auto"):
     return K.sparsify_ef(x, threshold, interpret=(impl == "pallas_interpret"))
 
 
+def sparsify_quantize_ef(x, threshold, step, levels, seed, base: int = 0,
+                         *, impl: str = "auto"):
+    """Fused sparsify + stochastic quantize + EF (compression codecs).
+
+    Accepts any leaf shape; the Pallas path flattens internally.  The jnp
+    oracle and the kernel share the counter-based dither of
+    ``compression.quant``, so every impl returns identical values.
+    """
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return REF.sparsify_quantize_ef_ref(x, threshold, step, levels, seed,
+                                            base=base)
+    from repro.kernels import sparsify_ef as K
+
+    up, err, cnt = K.sparsify_quantize_ef(
+        x.reshape(-1), threshold, step, levels, seed, base,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return up.reshape(x.shape), err.reshape(x.shape), cnt
+
+
 def decode_attn(q, k, v, length, *, impl: str = "auto"):
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return REF.decode_attn_ref(q, k, v, length)

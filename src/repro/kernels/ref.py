@@ -18,6 +18,32 @@ def sparsify_ef_ref(x: jax.Array, threshold: jax.Array):
     return upload, error, jnp.sum(mask).astype(jnp.float32)
 
 
+def sparsify_quantize_ef_ref(x: jax.Array, threshold, step, levels, seed,
+                             base: int = 0):
+    """Fused sparsify + stochastic quantize + error-feedback reference.
+
+    x: any shape/float dtype; threshold/step/levels: scalar f32; seed:
+    scalar int32; base: static global element offset (multi-leaf messages).
+    Returns (upload, error, count): upload = dequantised b-bit value where
+    |x| >= t else 0, error = x - upload (so the EF memory absorbs BOTH the
+    dropped coordinates and the quantisation residual of kept ones),
+    count = #selected (f32).  Dither is the counter-based hash of
+    ``compression.quant``, so the upload and count are bit-identical to the
+    Pallas kernel; the error may differ by one rounding where XLA fuses
+    ``x - q*step`` into an FMA (allclose in tests).
+    """
+    from repro.compression.quant import dither_u01
+
+    xf = x.astype(jnp.float32)
+    mask = jnp.abs(xf) >= threshold
+    idx = base + jnp.arange(x.size).reshape(x.shape)
+    u = dither_u01(jnp.asarray(seed), idx)
+    q = jnp.clip(jnp.floor(xf / step + u), -levels, levels) * step
+    upload = jnp.where(mask, q, 0.0).astype(x.dtype)
+    error = (xf - upload.astype(jnp.float32)).astype(x.dtype)
+    return upload, error, jnp.sum(mask).astype(jnp.float32)
+
+
 def decode_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array, length):
     """Single-token GQA decode attention reference.
 

@@ -1,15 +1,29 @@
-"""Pallas TPU kernel: fused sparsify + error-feedback update.
+"""Pallas TPU kernels: fused sparsify(+quantize) + error-feedback update.
 
 The paper's per-round hot spot: every contacted device transforms its
 upload vector x (model-sized, 6.5M-72B elements) into
     upload = x * [|x| >= t],   error = x * [|x| < t],   count = popcount
 Naive jnp issues three separate elementwise passes (2 reads + 2 writes + a
-reduce read).  The fused kernel streams x through VMEM once per block and
-emits both outputs + a per-block partial count: 1 read + 2 writes — a 40%
-HBM-traffic cut on a purely memory-bound op.
+reduce read).  The fused ``sparsify_ef`` kernel streams x through VMEM once
+per block and emits both outputs + a per-block partial count: 1 read + 2
+writes — a 40% HBM-traffic cut on a purely memory-bound op.
+
+``sparsify_quantize_ef`` extends the same single pass to the compression
+subsystem's quantising codecs (repro/compression): kept values are
+stochastically rounded onto the ``levels``-grid with counter-based dither
+(``compression.quant.dither_u01`` — pure uint32 hashing, so the upload is
+bit-identical to the jnp oracle ``kernels.ref.sparsify_quantize_ef_ref``),
+the quantised upload, the DEQUANTISED error memory (x - upload, absorbing
+the quantisation residual), and the popcount all leave VMEM in one pass.
+A separate quantise stage would re-read the masked upload from HBM;
+fusing it is free — a handful of extra VPU flops on a bandwidth-bound op.
 
 Layout: x viewed as (rows, 1024) f32/bf16, blocked (BLOCK_R, 1024) —
 lane-dim 1024 = 8 x 128 keeps the VPU tiles full and 128-aligned.
+
+``interpret=None`` (the default) auto-selects: compiled on TPU, interpret
+mode elsewhere — so production entry points run the real kernel where it
+matters without every call site threading backend checks.
 """
 from __future__ import annotations
 
@@ -19,8 +33,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.compression.quant import dither_u01
+
 LANE = 1024
 BLOCK_R = 256  # (256, 1024) f32 = 1 MiB per ref — comfortably inside VMEM
+
+
+def _resolve_interpret(interpret):
+    """None -> interpret only off-TPU (compiled where it matters)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
 
 def _kernel(x_ref, t_ref, up_ref, err_ref, cnt_ref):
@@ -34,12 +57,14 @@ def _kernel(x_ref, t_ref, up_ref, err_ref, cnt_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def sparsify_ef(x: jax.Array, threshold: jax.Array, *, interpret: bool = True):
+def sparsify_ef(x: jax.Array, threshold: jax.Array, *,
+                interpret: bool | None = None):
     """x: (n,) -> (upload (n,), error (n,), count scalar f32).
 
     Pads n up to a LANE*BLOCK_R multiple internally; padding cannot pass the
     threshold (padded with 0 and t > 0 handled via +inf sentinel for pads).
     """
+    interpret = _resolve_interpret(interpret)
     n = x.size
     t = jnp.asarray(threshold, jnp.float32).reshape(1)
     per_block = LANE * BLOCK_R
@@ -71,4 +96,73 @@ def sparsify_ef(x: jax.Array, threshold: jax.Array, *, interpret: bool = True):
     # correct for zero padding counted when t <= 0
     pad_elems = padded - n
     count = count - jnp.where(t[0] <= 0, float(pad_elems), 0.0)
+    return up.reshape(-1)[:n], err.reshape(-1)[:n], count
+
+
+def _kernel_q(x_ref, p_ref, seed_ref, up_ref, err_ref, cnt_ref, *, base: int):
+    """params p = [threshold, step, levels]; seed: (1,) int32; base static."""
+    x = x_ref[...]
+    t, step, levels = p_ref[0], p_ref[1], p_ref[2]
+    xf = x.astype(jnp.float32)
+    mask = jnp.abs(xf) >= t
+    # global flat element index of this block's elements; int32 wrap-around
+    # at huge offsets is fine — the uint32 dither hash wraps identically in
+    # the jnp oracle
+    i = pl.program_id(0)
+    rows = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    idx = base + (i * x.shape[0] + rows) * x.shape[1] + cols
+    u = dither_u01(seed_ref[0], idx)
+    q = jnp.clip(jnp.floor(xf / step + u), -levels, levels) * step
+    upload = jnp.where(mask, q, 0.0).astype(x.dtype)
+    up_ref[...] = upload
+    err_ref[...] = (xf - upload.astype(jnp.float32)).astype(x.dtype)
+    cnt_ref[0] = jnp.sum(mask.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("base", "interpret"))
+def sparsify_quantize_ef(x: jax.Array, threshold, step, levels, seed,
+                         base: int = 0, *, interpret: bool | None = None):
+    """x: (n,) -> (quantised upload (n,), dequantised error (n,), count).
+
+    Same blocking/padding as ``sparsify_ef``; upload/count match
+    ``kernels.ref.sparsify_quantize_ef_ref`` bit-for-bit (shared dither;
+    error up to one FMA rounding).  ``base`` offsets the dither counter
+    for multi-leaf messages.
+    """
+    interpret = _resolve_interpret(interpret)
+    n = x.size
+    params = jnp.stack([
+        jnp.asarray(threshold, jnp.float32),
+        jnp.asarray(step, jnp.float32),
+        jnp.asarray(levels, jnp.float32),
+    ])
+    seed_arr = jnp.asarray(seed, jnp.int32).reshape(1)
+    per_block = LANE * BLOCK_R
+    blocks = max((n + per_block - 1) // per_block, 1)
+    padded = blocks * per_block
+    xp = jnp.pad(x.reshape(-1), (0, padded - n)).reshape(blocks * BLOCK_R, LANE)
+    up, err, cnt = pl.pallas_call(
+        functools.partial(_kernel_q, base=int(base)),
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_R, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_R, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((blocks * BLOCK_R, LANE), x.dtype),
+            jax.ShapeDtypeStruct((blocks * BLOCK_R, LANE), x.dtype),
+            jax.ShapeDtypeStruct((blocks,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, params, seed_arr)
+    count = jnp.sum(cnt)
+    pad_elems = padded - n
+    count = count - jnp.where(params[0] <= 0, float(pad_elems), 0.0)
     return up.reshape(-1)[:n], err.reshape(-1)[:n], count

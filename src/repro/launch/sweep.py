@@ -5,6 +5,13 @@
         --speeds 5,10,20 --mobility exponential --seeds 3 \
         --rounds 60 --devices 8 --out runs/sweep
 
+Compression-codec comparison (one command, resumable — how the same
+contact bit budget is best spent; see repro/compression):
+
+    PYTHONPATH=src python -m repro.launch.sweep \
+        --arch resnet9-cifar10 --policies mads,mads-joint,qsgd,fixed-kb \
+        --speeds 10 --seeds 3 --rounds 60 --out runs/codecs
+
 Every (policy, mobility, speed) group runs its seeds in ONE vmapped
 compiled program (repro/experiments); completed cells found in --out are
 skipped, so an interrupted sweep resumes.  Results: per-cell npz histories
@@ -82,6 +89,12 @@ def main() -> None:
     ap.add_argument("--contact-const", type=float, default=40.0)
     ap.add_argument("--intercontact-const", type=float, default=300.0)
     ap.add_argument("--energy", type=float, nargs=2, default=(40.0, 80.0))
+    ap.add_argument("--fixed-k-frac", type=float, default=0.01,
+                    help="fixed-kb codec: keep-fraction target")
+    ap.add_argument("--fixed-bits", type=int, default=8,
+                    help="fixed-kb codec: value bit-width")
+    ap.add_argument("--b-range", type=int, nargs=2, default=(2, 16),
+                    help="joint/qsgd codecs: value bit-width search range")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--width", type=int, default=0,
                     help=">0: override d_model (CPU-sized sweeps)")
@@ -102,6 +115,8 @@ def main() -> None:
         intercontact_const=args.intercontact_const,
         energy_budget=tuple(args.energy),
         sparsifier="exact" if model.num_params() < 2_000_000 else "sampled",
+        fixed_k_frac=args.fixed_k_frac, fixed_bits=args.fixed_bits,
+        compress_b_min=args.b_range[0], compress_b_max=args.b_range[1],
     )
     grid = ExperimentGrid(
         policies=tuple(args.policies.split(",")),

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.checkpoint import save
 from repro.configs import FLConfig, get_config
+from repro.core import baselines as BL
 from repro.core.runner import run_afl
 from repro.data import (
     DeviceLoader,
@@ -78,8 +79,7 @@ def build_federation(cfg, fl, *, train_n=2000, eval_n=512, seq_len=64, seed=0):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="resnet9-cifar10")
-    ap.add_argument("--policy", default="mads",
-                    choices=["mads", "optimal", "afl-spar", "afl", "sfl-spar", "fedmobile"])
+    ap.add_argument("--policy", default="mads", choices=sorted(BL.ALL))
     ap.add_argument("--rounds", type=int, default=200)
     ap.add_argument("--devices", type=int, default=20)
     ap.add_argument("--batch-size", type=int, default=32)

@@ -1,0 +1,294 @@
+"""Compressor semantics: budget respect, EF round-trips, engine parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compression import (
+    SCALE_BITS,
+    CompressorState,
+    FixedKbCompressor,
+    JointCompressor,
+    QSGDCompressor,
+    TopKCompressor,
+    dither_u01,
+    init_state,
+    solve_kb,
+)
+from repro.configs import FLConfig, get_config
+from repro.core import baselines as BL
+from repro.core import sparsify as SP
+from repro.core.afl import afl_init, afl_round
+from repro.core.runner import run_afl
+from repro.experiments import DataShard, run_afl_scanned
+from repro.launch.train import build_device_data
+from repro.models.registry import build_model
+
+RNG = np.random.default_rng(7)
+
+
+def _tree(scale=1.0):
+    return {
+        "a": jnp.asarray(RNG.normal(0, scale, (64, 8)), jnp.float32),
+        "b": jnp.asarray(RNG.normal(0, 2 * scale, (100,)), jnp.float32),
+    }
+
+
+TREE = _tree()
+S = sum(l.size for l in jax.tree.leaves(TREE))
+CODECS = [
+    TopKCompressor(s=S),
+    TopKCompressor(s=S, u=8),
+    JointCompressor(s=S),
+    QSGDCompressor(s=S),
+    FixedKbCompressor(s=S, k_frac=0.1, b=8),
+]
+BUDGETS = [0.0, 33.0, 50.0, 500.0, 5000.0, 50_000.0, 1e7]
+
+
+@pytest.mark.parametrize("comp", CODECS, ids=lambda c: type(c).__name__
+                         + (f"_u{c.u}" if hasattr(c, "u") else ""))
+def test_realized_bits_within_budget(comp):
+    """Acceptance: realised upload bits never exceed tau*A for ANY budget."""
+    state = init_state(TREE, jax.random.key(0))
+    for budget in BUDGETS:
+        _, _, stats = comp.compress(TREE, jnp.float32(budget), state)
+        assert float(stats["bits"]) <= budget + 1e-3, (budget, float(stats["bits"]))
+        assert 0.0 <= float(stats["k"]) <= S
+
+
+@pytest.mark.parametrize("comp", CODECS, ids=lambda c: type(c).__name__
+                         + (f"_u{c.u}" if hasattr(c, "u") else ""))
+def test_error_feedback_identity(comp):
+    """payload + new error == signal + old error (nothing is lost)."""
+    state = init_state(TREE, jax.random.key(1))
+    state = CompressorState(
+        error=jax.tree.map(lambda l: l * 0.25, _tree(0.5)), key=state.key
+    )
+    payload, state2, _ = comp.compress(TREE, jnp.float32(4000.0), state)
+    xt = jax.tree.map(jnp.add, TREE, state.error)
+    recon = jax.tree.map(jnp.add, payload, state2.error)
+    for a, b in zip(jax.tree.leaves(xt), jax.tree.leaves(recon)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_ef_state_roundtrips_through_scan():
+    """CompressorState threads a lax.scan: residuals telescope, so the sum
+    of payloads + the final error reconstructs the sum of inputs."""
+    comp = JointCompressor(s=S)
+    signals = [_tree() for _ in range(6)]
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *signals)
+    state0 = init_state(signals[0], jax.random.key(3))
+
+    def body(state, x):
+        payload, state, stats = comp.compress(x, jnp.float32(3000.0), state)
+        return state, (payload, stats["bits"])
+
+    state, (payloads, bits) = jax.lax.scan(body, state0, stacked)
+    total_in = jax.tree.map(lambda l: jnp.sum(l, 0), stacked)
+    total_out = jax.tree.map(lambda p, e: jnp.sum(p, 0) + e, payloads,
+                             state.error)
+    for a, b in zip(jax.tree.leaves(total_in), jax.tree.leaves(total_out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+    assert float(jnp.max(bits)) <= 3000.0
+    # the PRNG key advanced every step (stochastic codec state is live)
+    assert not np.array_equal(np.asarray(jax.random.key_data(state.key)),
+                              np.asarray(jax.random.key_data(state0.key)))
+
+
+def test_topk32_matches_sparsify_tree():
+    """u=32 top-k codec reproduces the seed operator exactly."""
+    comp = TopKCompressor(s=S, u=32)
+    state = init_state(TREE, jax.random.key(0))
+    budget = 300.0 * (32 + comp.index_bits)  # buys exactly 300 coords
+    payload, state2, stats = comp.compress(TREE, jnp.float32(budget), state)
+    up, err, k = SP.sparsify_tree(TREE, 300.0, method="exact")
+    assert float(stats["k"]) == float(k) == 300.0
+    for a, b in zip(jax.tree.leaves(payload), jax.tree.leaves(up)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(state2.error), jax.tree.leaves(err)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quantization_unbiased():
+    """Stochastic rounding: payload averages to the signal across seeds."""
+    x = {"v": jnp.asarray(RNG.normal(0, 1, 512), jnp.float32)}
+    c = QSGDCompressor(s=512, b_max=4)
+    acc = jnp.zeros(512)
+    n = 200
+    for i in range(n):
+        st = init_state(x, jax.random.key(i))
+        pay, _, stats = c.compress(x, jnp.float32(512 * 4 + SCALE_BITS), st)
+        assert float(stats["b"]) == 4.0
+        acc = acc + pay["v"]
+    # step = amax/(2^3-1); mean error ~ step/sqrt(n) << step
+    step = float(jnp.max(jnp.abs(x["v"]))) / 7.0
+    assert float(jnp.max(jnp.abs(acc / n - x["v"]))) < step / 2
+
+
+def test_joint_solve_kb_budget_scaling():
+    """More budget -> never fewer coords, never a lower bit-width regime
+    collapse; huge budgets saturate k=s and grow b."""
+    grid = tuple(range(2, 17))
+    ks, bs = [], []
+    for budget in [100.0, 1e3, 1e4, 1e5, 1e6, 1e8]:
+        k, b = solve_kb(jnp.float32(budget), S, 10, grid)
+        ks.append(float(k))
+        bs.append(float(b))
+    assert all(a <= b for a, b in zip(ks, ks[1:]))
+    assert ks[-1] == S  # saturates: everything ships
+    # ...at high precision (score ties at f32 eps above b~13; argmax takes
+    # the first, so "high" not necessarily b_max)
+    assert bs[-1] >= 12.0
+    assert bs[0] <= bs[-1]
+
+
+def test_exact_mode_ties_undershoot_not_withhold():
+    """Magnitude ties (bf16 buckets, duplicated values) at the threshold
+    must not overshoot the budget OR stall uploads: the strict-above
+    threshold ships the strictly-larger set."""
+    s = 8192
+    vals = np.concatenate([
+        np.arange(2.0, 52.0),          # 50 distinct magnitudes > 1
+        np.ones(1000),                 # a massive tied bucket AT the cutoff
+        RNG.uniform(0.0, 0.5, s - 1050),
+    ])
+    tree = {"w": jnp.asarray(RNG.permutation(vals), jnp.float32)}
+    comp = TopKCompressor(s=s)
+    state = init_state(tree, jax.random.key(2))
+    budget = 500.0 * (32 + comp.index_bits)  # cutoff lands inside the bucket
+    _, _, stats = comp.compress(tree, jnp.float32(budget), state)
+    assert float(stats["bits"]) <= budget
+    assert float(stats["k"]) == 50.0  # the distinct head ships; ties defer
+    # bf16-bucketed gradients (the LLM federations) also keep shipping
+    x16 = jnp.asarray(RNG.normal(0, 1, s), jnp.bfloat16).astype(jnp.float32)
+    comp_j = JointCompressor(s=s)
+    for budget in (2e4, 2e5):
+        _, _, st2 = comp_j.compress({"w": x16}, jnp.float32(budget), state)
+        assert 0.0 < float(st2["bits"]) <= budget
+
+
+def test_sampled_mode_budget_gate():
+    """Sampled thresholds can overshoot k_target; the all-or-nothing gate
+    in Compressor.spend still guarantees bits <= budget, and a withheld
+    upload parks the whole signal in the EF memory."""
+    tree = {"w": jnp.asarray(RNG.normal(0, 1, 300_000), jnp.float32)}
+    comp = JointCompressor(s=300_000, method="sampled", sample=4096)
+    state = init_state(tree, jax.random.key(5))
+    shipped = 0
+    for budget in (5e4, 2e5, 1e6, 5e6):
+        payload, st2, stats = comp.compress(tree, jnp.float32(budget), state)
+        assert float(stats["bits"]) <= budget, budget
+        if float(stats["k"]) > 0:
+            shipped += 1
+        else:  # withheld: nothing on the wire, everything in EF
+            assert float(sum(jnp.sum(jnp.abs(l))
+                             for l in jax.tree.leaves(payload))) == 0.0
+            np.testing.assert_array_equal(
+                np.asarray(st2.error["w"]), np.asarray(tree["w"]))
+    assert shipped >= 1  # the gate is not vacuously withholding everything
+
+
+def test_dither_deterministic_and_uniform():
+    idx = jnp.arange(100_000)
+    u = dither_u01(jnp.int32(42), idx)
+    u2 = dither_u01(jnp.int32(42), idx)
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(u2))
+    assert 0.0 <= float(jnp.min(u)) and float(jnp.max(u)) < 1.0
+    assert abs(float(jnp.mean(u)) - 0.5) < 5e-3
+    u3 = dither_u01(jnp.int32(43), idx)
+    assert float(jnp.mean(jnp.abs(u - u3))) > 0.1  # seed actually matters
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def federation():
+    cfg = get_config("resnet9-cifar10").replace(d_model=4)
+    model = build_model(cfg)
+    fl = FLConfig(
+        num_devices=4, rounds=8, batch_size=8, learning_rate=0.02,
+        mean_contact=6.0, mean_intercontact=30.0, energy_budget=(40.0, 80.0),
+    )
+    dev, ev = build_device_data(cfg, fl, train_n=160, eval_n=64, seed=0)
+    return cfg, model, fl, dev, ev
+
+
+def test_round_bits_never_exceed_contact_budget(federation):
+    """Inside a real jitted round: per-device realised bits <= tau * A(p)."""
+    from repro.core import mads as M
+
+    cfg, model, fl, dev, ev = federation
+    policy = BL.ALL["mads-joint"](model.num_params(), fl)
+    ctl = policy.controller
+    state = afl_init(model, cfg, fl, jax.random.key(0))
+    shard = DataShard(dev, fl.batch_size, seed=0)
+    batch = shard.traced_batch(shard.seed_key(0), 0)
+    n = fl.num_devices
+    zeta = jnp.ones((n,), jnp.float32)
+    tau = jnp.asarray(RNG.uniform(0.05, 6.0, n), jnp.float32)
+    h2 = jnp.asarray(RNG.uniform(1e-12, 1e-8, n), jnp.float32)
+    budgets = jnp.full((n,), 60.0)
+    state, m = afl_round(state, batch, zeta, tau, h2, budgets,
+                         model=model, cfg=cfg, fl=fl, policy=policy)
+    cap = tau * M.rate_bps(m["power"], h2, ctl.bandwidth, ctl.noise_w_hz)
+    assert np.all(np.asarray(m["bits"]) <= np.asarray(cap) * (1 + 1e-5) + 1e-3)
+    assert float(jnp.sum(m["bits"])) > 0  # something actually shipped
+
+
+@pytest.mark.parametrize("policy", ["mads-joint", "qsgd"])
+def test_scan_loop_equivalence_quantizing(federation, policy):
+    """Loop and scan engines agree with a quantising compressor (the EF +
+    PRNG codec state round-trips identically through lax.scan)."""
+    cfg, model, fl, dev, ev = federation
+    shard = DataShard(dev, fl.batch_size, seed=0)
+    loop = run_afl(model, cfg, fl, policy, shard, ev, rounds=8, eval_every=4)
+    scan = run_afl_scanned(model, cfg, fl, policy, shard, ev, rounds=8,
+                           eval_every=4)
+    assert loop.history["round"] == scan.history["round"]
+    for k in loop.history:
+        np.testing.assert_allclose(
+            np.asarray(loop.history[k]), np.asarray(scan.history[k]),
+            rtol=2e-4, atol=1e-5, err_msg=f"{policy}:{k}",
+        )
+    assert loop.history["bits_mean"][-1] > 0
+
+
+def test_compressor_policies_share_compile_class(federation):
+    """Grid cache-key treatment: same codec params -> equal engine policies
+    (one compile), different codec class -> distinct."""
+    from repro.experiments.grid import engine_policy
+
+    cfg, model, fl, dev, ev = federation
+    s = model.num_params()
+    assert engine_policy(BL.ALL["mads-joint"](s, fl)) == engine_policy(
+        BL.ALL["mads-joint"](s, fl))
+    assert engine_policy(BL.ALL["mads-joint"](s, fl)) != engine_policy(
+        BL.ALL["qsgd"](s, fl))
+    assert engine_policy(BL.ALL["mads-joint"](s, fl)) != engine_policy(
+        BL.ALL["mads"](s, fl))
+
+
+@pytest.mark.slow
+def test_sweep_all_codecs_resumable(federation, tmp_path):
+    """Acceptance: one sweep over {mads, mads-joint, qsgd, fixed-kb} with
+    resumable results."""
+    from repro.experiments import ExperimentGrid, ResultsStore
+    from repro.launch.sweep import run_sweep
+
+    cfg, model, fl, dev, ev = federation
+    shard = DataShard(dev, fl.batch_size, seed=0)
+    grid = ExperimentGrid(
+        policies=("mads", "mads-joint", "qsgd", "fixed-kb"),
+        speeds=(10.0,), seeds=(0,), rounds=4, eval_every=2, base=fl,
+    )
+    store = ResultsStore(str(tmp_path))
+    table = run_sweep(grid, store, model, cfg, shard, ev)
+    assert all(p in table for p in grid.policies)
+    assert store.pending(grid.cells()) == []
+    # resume: nothing re-runs, the table rebuilds from disk
+    table2 = run_sweep(grid, store, model, cfg, shard, ev)
+    assert table2 == table

@@ -6,8 +6,17 @@ import pytest
 
 from repro.kernels import ops
 from repro.kernels.decode_attn import decode_attn
-from repro.kernels.ref import decode_attn_ref, sparsify_ef_ref, ssd_scan_ref
-from repro.kernels.sparsify_ef import sparsify_ef
+from repro.kernels.ref import (
+    decode_attn_ref,
+    sparsify_ef_ref,
+    sparsify_quantize_ef_ref,
+    ssd_scan_ref,
+)
+from repro.kernels.sparsify_ef import (
+    _resolve_interpret,
+    sparsify_ef,
+    sparsify_quantize_ef,
+)
 from repro.kernels.ssd_scan import ssd_scan
 from repro.models.mamba2 import ssd_chunked
 
@@ -30,6 +39,59 @@ def test_sparsify_ef_reconstruction():
     x = jnp.asarray(RNG.normal(0, 1, 50000), jnp.float32)
     u, e, _ = sparsify_ef(x, jnp.float32(0.7))
     np.testing.assert_allclose(np.asarray(u + e), np.asarray(x))
+
+
+def test_interpret_auto_selects_by_backend():
+    """interpret=None compiles on TPU and interprets elsewhere (satellite:
+    the jitted entry must not silently interpret on TPU)."""
+    assert _resolve_interpret(None) == (jax.default_backend() != "tpu")
+    assert _resolve_interpret(True) is True
+    assert _resolve_interpret(False) is False
+
+
+@pytest.mark.parametrize("n", [128, 4096, 300001, 7])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sparsify_quantize_ef_matches_ref(n, dtype):
+    """Fused sparsify+quantize+EF kernel vs oracle: upload/count bit-exact
+    (shared counter dither), error within one FMA rounding."""
+    x = jnp.asarray(RNG.normal(0, 1, n), dtype)
+    step, levels = jnp.float32(0.01), jnp.float32(127.0)
+    for t in [0.0, 0.7, np.inf]:
+        u, e, c = sparsify_quantize_ef(x, jnp.float32(t), step, levels,
+                                       1234, 5)
+        ur, er, cr = sparsify_quantize_ef_ref(x, jnp.float32(t), step,
+                                              levels, 1234, base=5)
+        np.testing.assert_array_equal(
+            np.asarray(u, np.float32), np.asarray(ur, np.float32))
+        np.testing.assert_allclose(
+            np.asarray(e, np.float32), np.asarray(er, np.float32), atol=1e-6)
+        assert float(c) == float(cr), (n, t)
+
+
+def test_sparsify_quantize_ef_semantics():
+    """Upload values sit on the step grid; EF absorbs the quant residual."""
+    x = jnp.asarray(RNG.normal(0, 1, 4096), jnp.float32)
+    step = jnp.float32(0.25)
+    u, e, c = sparsify_quantize_ef(x, jnp.float32(0.5), step, jnp.float32(7.0),
+                                   99, 0)
+    un = np.asarray(u)
+    np.testing.assert_allclose(un / 0.25, np.round(un / 0.25), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(u + e), np.asarray(x), atol=1e-6)
+    assert float(c) == float(np.sum(np.abs(np.asarray(x)) >= 0.5))
+    # base offset changes the dither draw
+    u2, _, _ = sparsify_quantize_ef(x, jnp.float32(0.5), step,
+                                    jnp.float32(7.0), 99, 4096)
+    assert not np.array_equal(un, np.asarray(u2))
+
+
+def test_ops_sparsify_quantize_dispatch_nd():
+    """ops wrapper accepts ND leaves and falls back to ref off-TPU."""
+    x = jnp.asarray(RNG.normal(0, 1, (32, 16)), jnp.float32)
+    u, e, c = ops.sparsify_quantize_ef(x, 0.5, 0.01, 127.0, 7, base=3)
+    ur, er, cr = sparsify_quantize_ef_ref(x, 0.5, 0.01, 127.0, 7, base=3)
+    assert u.shape == x.shape
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(ur))
+    assert float(c) == float(cr)
 
 
 @pytest.mark.parametrize(

@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Markdown link checker (stdlib-only, offline).
+
+Scans every ``*.md`` file under the repo for ``[text](target)`` links and
+verifies that relative targets exist on disk (anchors are stripped;
+``http(s)://`` / ``mailto:`` targets are skipped — the container is
+offline).  Used by CI and ``tests/test_docs.py`` so docs cross-references
+(root README <-> subsystem READMEs) cannot rot silently.
+
+    python tools/check_links.py [root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — target until the first unescaped ')'; tolerates titles
+LINK_RE = re.compile(r"\[[^\]]*\]\(\s*<?([^)>\s]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "runs", "node_modules"}
+
+
+def iter_md_files(root: pathlib.Path):
+    for path in sorted(root.rglob("*.md")):
+        if not SKIP_DIRS.intersection(p.name for p in path.parents):
+            yield path
+
+
+def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    in_code = False
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1).split("#", 1)[0]
+            if not target or target.startswith(SKIP_PREFIXES):
+                continue
+            resolved = (md.parent / target).resolve()
+            if not resolved.exists():
+                errors.append(
+                    f"{md.relative_to(root)}:{lineno}: broken link "
+                    f"-> {m.group(1)}"
+                )
+    return errors
+
+
+def main(root: str = ".") -> int:
+    rootp = pathlib.Path(root).resolve()
+    errors, checked = [], 0
+    for md in iter_md_files(rootp):
+        checked += 1
+        errors.extend(check_file(md, rootp))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {checked} markdown files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else "."))
