@@ -83,30 +83,111 @@ def codec_rows(smoke: bool):
                                 eval_n=64 if smoke else 256, seed=0)
     shard = DataShard(dev, fl.batch_size, seed=0)
     rows = []
-    for policy in ("mads", "mads-joint", "qsgd", "fixed-kb"):
+    for policy in ("mads", "mads-joint", "mads-joint-pl", "qsgd", "fixed-kb"):
+        flp = fl
+        name = policy
+        if policy == "mads-joint-pl":  # per-layer (k_l, b_l) budgets
+            import dataclasses
+
+            policy = "mads-joint"
+            flp = dataclasses.replace(fl, per_layer_budget=True)
         t0 = time.time()
-        res = run_afl_scanned(model, cfg, fl, policy, shard, ev,
+        res = run_afl_scanned(model, cfg, flp, policy, shard, ev,
                               rounds=rounds, eval_every=rounds)
         us = (time.time() - t0) / rounds * 1e6
         rows.append(csv_row(
-            f"codec_{policy}", us,
+            f"codec_{name}", us,
             f"eval={res.final_eval:.4f},bits_mean={res.history['bits_mean'][-1]:.0f},"
             f"k_mean={res.history['k_mean'][-1]:.0f}",
         ))
     return rows
 
 
-def run(smoke: bool = False):
-    return micro_rows(smoke) + codec_rows(smoke)
+def mesh_rows(smoke: bool):
+    """Sharded parity row: the pjit AFL step with the joint codec on a
+    simulated (mesh_devices, 1) client mesh vs the same step unsharded —
+    realised bits must agree (codec thresholds are shard-safe)."""
+    from repro.configs import FLConfig, get_config
+    from repro.core import baselines as BL
+    from repro.core.distributed import (
+        DistConfig, client_state_shardings, init_state, make_afl_train_step,
+        run_afl_rounds,
+    )
+    from repro.core.runner import build_provider, sample_budgets
+    from repro.experiments import DataShard
+    from repro.launch.mesh import make_client_mesh
+    from repro.launch.train import build_device_data
+    from repro.models.registry import build_model
+
+    cfg = get_config("resnet9-cifar10").replace(d_model=4)
+    model = build_model(cfg)
+    rounds = 3 if smoke else 10
+    fl = FLConfig(num_devices=4, rounds=rounds, batch_size=8,
+                  mean_contact=4.0, mean_intercontact=20.0)
+    dev, _ = build_device_data(cfg, fl, train_n=160, eval_n=32, seed=0)
+    shard = DataShard(dev, fl.batch_size, seed=0)
+    key = shard.seed_key(0)
+    policy = BL.ALL["mads-joint"](model.num_params(), fl)
+    dcfg = DistConfig(num_clients=fl.num_devices, rounds=rounds,
+                      state_dtype="float32")
+    step = jax.jit(make_afl_train_step(model, cfg, dcfg, policy.controller,
+                                       compressor=policy.compressor))
+    mesh = make_client_mesh(fl.num_devices)
+
+    def batch_fn(r):
+        return jax.tree.map(lambda v: v.reshape((-1,) + v.shape[2:]),
+                            shard.traced_batch(key, r))
+
+    def run(use_mesh):
+        provider = build_provider(fl, "mads-joint", None, rounds, 0)
+        state = init_state(model, dcfg, jax.random.key(0))
+        if use_mesh:
+            # commit the client axis to the mesh's data axis — a bare
+            # `with mesh:` around jit would keep everything on one device
+            state = jax.device_put(state, client_state_shardings(state, mesh))
+        budgets = sample_budgets(fl, 0)
+        t0 = time.time()
+        _, hist = run_afl_rounds(step, state, provider, batch_fn, budgets,
+                                 rounds=rounds)
+        wall = (time.time() - t0) / rounds * 1e6
+        bits = np.stack([np.asarray(m["bits"]) for m in hist])
+        return wall, bits
+
+    us_1, bits_1 = run(False)
+    if mesh is None:
+        return [csv_row("dist_joint_mesh1", us_1,
+                        "impl=unsharded,mesh_unavailable")]
+    ndev = int(np.prod(mesh.devices.shape))
+    us_m, bits_m = run(True)
+    agree = bool(np.array_equal(bits_1, bits_m))
+    return [
+        csv_row("dist_joint_mesh1", us_1, "impl=unsharded"),
+        csv_row(f"dist_joint_mesh{ndev}", us_m,
+                f"impl=client_mesh,bits_agree={agree}"),
+    ]
+
+
+def run(smoke: bool = False, mesh: int = 0):
+    rows = micro_rows(smoke) + codec_rows(smoke)
+    if mesh > 1:
+        rows += mesh_rows(smoke)
+    return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized: tiny model, few rounds")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help=">1: force this many simulated host devices and "
+                         "add the sharded-vs-unsharded parity rows")
     args = ap.parse_args()
+    if args.mesh > 1:
+        from repro.launch.mesh import force_host_device_count
+
+        force_host_device_count(args.mesh)
     print("name,us_per_call,derived")
-    for row in run(smoke=args.smoke):
+    for row in run(smoke=args.smoke, mesh=args.mesh):
         print(row)
 
 

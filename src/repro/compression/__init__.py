@@ -2,12 +2,20 @@
 
 One contract — ``compress(x, budget_bits, state) -> (payload, state,
 stats)`` — four codecs: top-k (Proposition 1), QSGD-style dense
-quantisation, the closed-form joint (k, b) codec, and a budget-clipped
+quantisation, the closed-form joint (k, b) codec (optionally with
+per-layer (k_l, b_l) budgets, see perlayer.py), and a budget-clipped
 fixed-(k, b) baseline.  ``core.afl.Policy.compressor`` wires any of them
-into both execution engines; ``core/README.md`` maps the math.
+into the single-host engines AND the pjit distributed step
+(``core/distributed.py``); ``core/README.md`` maps the math and the
+sharded-threshold contract.
 """
 from repro.compression.base import Compressor, CompressorState, init_state
 from repro.compression.joint import JointCompressor, solve_kb
+from repro.compression.perlayer import (
+    solve_kb_per_leaf,
+    split_score,
+    uniform_split,
+)
 from repro.compression.qsgd import QSGDCompressor
 from repro.compression.quant import (
     SCALE_BITS,
@@ -32,6 +40,9 @@ __all__ = [
     "quant_levels",
     "quant_step",
     "solve_kb",
+    "solve_kb_per_leaf",
+    "split_score",
     "stochastic_round",
     "tree_amax",
+    "uniform_split",
 ]

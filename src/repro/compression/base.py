@@ -29,7 +29,17 @@ argument exactly like ``core.afl.Policy``):
 * ``topk.FixedKbCompressor`` — budget-clipped fixed (k, b) baseline.
 * ``qsgd.QSGDCompressor``    — quantise-everything, bit-width from budget.
 * ``joint.JointCompressor``  — the (k, b) split solved in closed form
-                                (module docstring has the derivation).
+                                (module docstring has the derivation);
+                                ``per_layer=True`` solves (k_l, b_l) per
+                                pytree leaf by greedy water-filling
+                                (``perlayer.solve_kb_per_leaf``; equations
+                                in core/README.md §per-layer budgets).
+
+Every codec also runs inside the pjit distributed step
+(``core/distributed.py``) — ``core.afl.compress_uploads`` is the shared
+invocation, and the sharded-threshold contract (``strict_threshold``'s
+``axis``/``s`` parameters, ``quant.tree_amax``'s ``axis``) is documented
+in core/README.md.
 """
 from __future__ import annotations
 
@@ -45,7 +55,8 @@ from repro.core.sparsify import _strided_sample
 from repro.kernels import ops
 
 
-def strict_threshold(tree, k, *, method: str = "exact", sample: int = 65536):
+def strict_threshold(tree, k, *, method: str = "exact", sample: int = 65536,
+                     axis: str | None = None, s: int | None = None):
     """|x| cutoff whose STRICT-above set has <= floor(k) elements.
 
     ``core.sparsify.tree_threshold`` returns the k-th order statistic for a
@@ -57,19 +68,36 @@ def strict_threshold(tree, k, *, method: str = "exact", sample: int = 65536):
     selects exactly floor(k) elements (the same set as top-k), and ties can
     only UNDERSHOOT — making ``bits <= budget`` provable in exact mode
     rather than gated.  k >= s selects everything; k < 1 selects nothing.
+
+    **Sharded contract** (core/README.md): when the signal is partitioned
+    over a mapped axis (``shard_map``/``pmap``), pass ``axis`` and the
+    GLOBAL flat size ``s`` — each shard contributes its local
+    ``_strided_sample`` (exact mode: its full magnitudes) and the blocks
+    are ``lax.all_gather``-ed over ``axis`` before the sort, so every
+    device sorts the same gathered sample and agrees on the threshold
+    bit-for-bit.  Shards must hold disjoint partitions of x.  Under plain
+    pjit/GSPMD (global view) no axis is needed: the strided slice keeps
+    shards local and only the small sample block is replicated.
     """
     leaves = jax.tree.leaves(tree)
-    s = sum(l.size for l in leaves)
+    local = sum(l.size for l in leaves)
+    if s is None:
+        s = local
     kf = jnp.asarray(k, jnp.float32)
     if method == "exact":
         flat = jnp.concatenate(
             [jnp.abs(l.astype(jnp.float32)).reshape(-1) for l in leaves])
+        if axis is not None:
+            flat = jax.lax.all_gather(flat, axis, tiled=True)
         srt = jnp.sort(flat)[::-1]
         idx = jnp.clip(jnp.floor(kf).astype(jnp.int32), 0, s - 1)
     else:
-        m_per = [max(int(sample * l.size / s), 16) for l in leaves]
+        m_per = [max(int(sample * l.size / max(local, 1)), 16)
+                 for l in leaves]
         flat = jnp.concatenate(
             [_strided_sample(l, m) for l, m in zip(leaves, m_per)])
+        if axis is not None:
+            flat = jax.lax.all_gather(flat, axis, tiled=True)
         srt = jnp.sort(flat)[::-1]
         frac = jnp.clip(kf / float(s), 0.0, 1.0)
         idx = jnp.clip(jnp.floor(frac * flat.size).astype(jnp.int32),
@@ -106,12 +134,24 @@ class Compressor:
     ``index_bits = ceil(log2 s)`` of position overhead on the wire
     (paper eq. 7c).  ``method``/``sample`` select the thresholding mode of
     ``core.sparsify`` (exact sort vs strided sample).
+
+    ``axis`` opts into the sharded contract (core/README.md): inside a
+    ``shard_map``/``pmap`` body where each device holds a disjoint shard
+    of the signal, the threshold sample, the quantisation amax, and the
+    selection count are all-reduced over the named axis
+    (``all_gather``/``pmax``/``psum``), so every shard agrees on (k, b)
+    and the budget gate fires identically everywhere.  Leave ``None``
+    (default) for single-host use and for the pjit/GSPMD distributed step,
+    whose global-view program needs no explicit collectives — there,
+    shard-safety means ``method="sampled"`` (the strided sample never
+    all-gathers the model; see ``core.sparsify._strided_sample``).
     """
 
     s: int
     method: str = "exact"
     sample: int = 65536
     error_feedback: bool = True
+    axis: str | None = None
 
     @property
     def index_bits(self) -> int:
@@ -195,10 +235,10 @@ class Compressor:
             )
             k_target = jnp.floor(jnp.maximum(k_target * (1.0 - rel), 0.0))
         t = strict_threshold(xt, k_target, method=self.method,
-                             sample=self.sample)
+                             sample=self.sample, axis=self.axis, s=self.s)
         if quantize:
             levels = Q.quant_levels(b)
-            step = Q.quant_step(Q.tree_amax(xt), levels)
+            step = Q.quant_step(Q.tree_amax(xt, axis=self.axis), levels)
             payload, error, k_actual = self.masked_payload(
                 xt, t, quantize=True, step=step, levels=levels,
                 seed=self.dither_seed(state),
@@ -208,6 +248,9 @@ class Compressor:
             payload, error, k_actual = self.masked_payload(
                 xt, t, quantize=False)
             overhead = 0
+        if self.axis is not None:
+            # shard-local popcounts -> the global k every device bills with
+            k_actual = jax.lax.psum(k_actual, self.axis)
         bits = k_actual * (b + self.index_bits) + overhead * (k_actual > 0)
         feasible = (bits <= budget_bits).astype(jnp.float32)
         payload = jax.tree.map(

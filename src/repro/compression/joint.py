@@ -74,12 +74,30 @@ def solve_kb(budget_bits, s: int, index_bits: int, b_grid):
 
 @dataclasses.dataclass(frozen=True)
 class JointCompressor(Compressor):
-    """MADS-joint: per-round (k*, b*) from the contact budget."""
+    """MADS-joint: per-round (k*, b*) from the contact budget.
+
+    ``per_layer=True`` replaces the single global split with per-leaf
+    (k_l, b_l) pairs solved by greedy water-filling against the same
+    budget — each leaf gets its own quantisation scale and width
+    (``perlayer.solve_kb_per_leaf``; equations in the module docstring and
+    core/README.md).  Not combined with the ``axis`` sharded contract:
+    per-leaf amax/thresholds are single-host / global-view only.
+    """
 
     b_grid: tuple = tuple(range(2, 17))
+    per_layer: bool = False
 
     def compress(self, x, budget_bits, state: CompressorState):
         xt = self.combined(x, state)
+        if self.per_layer:
+            if self.axis is not None:
+                raise NotImplementedError(
+                    "per_layer budgets under a shard_map axis are not "
+                    "supported; use the global-view pjit path"
+                )
+            from repro.compression.perlayer import compress_per_layer
+
+            return compress_per_layer(self, xt, budget_bits, state)
         k_target, b = solve_kb(budget_bits, self.s, self.index_bits,
                                self.b_grid)
         return self.spend(xt, k_target, b, budget_bits, state, quantize=True)

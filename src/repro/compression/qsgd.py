@@ -35,7 +35,7 @@ class QSGDCompressor(Compressor):
         send = (b >= self.b_min).astype(jnp.float32)
         b = b * send
         levels = Q.quant_levels(b)
-        step = Q.quant_step(Q.tree_amax(xt), levels)
+        step = Q.quant_step(Q.tree_amax(xt, axis=self.axis), levels)
         # threshold 0 selects every coordinate; send=0 withholds the round
         payload, error, _ = self.masked_payload(
             xt, jnp.float32(0.0), quantize=True, step=step, levels=levels,

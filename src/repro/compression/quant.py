@@ -76,8 +76,18 @@ def seed_from_key(key):
                               dtype=jnp.int32)
 
 
-def tree_amax(tree):
-    """Global max |value| across every leaf (one scale per message)."""
-    return jnp.max(jnp.stack([
+def tree_amax(tree, axis: str | None = None):
+    """Global max |value| across every leaf (one scale per message).
+
+    ``axis``: optional mapped axis name (``shard_map``/``pmap``) over which
+    the per-shard maxima are ``lax.pmax``-reduced, so every shard of a
+    partitioned message derives the same quantisation step (max is
+    order-independent, hence exact under any shard layout — the sharded
+    contract in core/README.md).
+    """
+    amax = jnp.max(jnp.stack([
         jnp.max(jnp.abs(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)
     ]))
+    if axis is not None:
+        amax = jax.lax.pmax(amax, axis)
+    return amax

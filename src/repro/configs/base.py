@@ -191,6 +191,9 @@ class FLConfig:
     compress_b_max: int = 16  # largest value bit-width the codecs consider
     fixed_k_frac: float = 0.01  # fixed-kb baseline: keep-fraction target
     fixed_bits: int = 8  # fixed-kb baseline: value bit-width
+    # joint codec: solve (k_l, b_l) per pytree leaf by greedy water-filling
+    # against the same tau*A budget (repro/compression/perlayer.py)
+    per_layer_budget: bool = False
     # non-iid
     dirichlet_rho: float = 0.5
     seed: int = 0

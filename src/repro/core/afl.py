@@ -70,6 +70,27 @@ class Policy:
         return k, p, energy
 
 
+def compress_uploads(comp: Compressor, g_n, e_n, ckey, budget_bits, n: int):
+    """One codec pass over the federation — shared by BOTH engines.
+
+    The single-host ``afl_round`` below and the pjit distributed step
+    (``core/distributed.py``) call this same function, so the key
+    splitting, per-device vmap, and ``CompressorState`` threading are
+    identical — which is what makes their uploads bit-identical (the
+    parity suite in tests/test_distributed_compression.py pins this).
+
+    Returns ``(upload, e_after, cstats, ckey)``: the dense dequantised
+    payloads, the error-feedback memories, the per-device ``{"k", "bits",
+    "b"}`` stats, and the advanced PRNG carry.
+    """
+    ckey, sub = jax.random.split(ckey)
+    dev_keys = jax.random.split(sub, n)
+    upload, cstate, cstats = jax.vmap(comp.compress)(
+        g_n, budget_bits, CompressorState(error=e_n, key=dev_keys)
+    )
+    return upload, cstate.error, cstats, ckey
+
+
 def _bcast_to(cond, leaf):
     return cond.reshape(cond.shape + (1,) * (leaf.ndim - 1))
 
@@ -140,15 +161,11 @@ def afl_round(state: AflState, batch, zeta, tau, h2, energy_budget,
         # codec path: the budget is the realised contact capacity tau*A(p)
         # (Proposition 1's left-hand side); the codec decides how to spend
         # it (k, b, or both) and returns the EF residual as its state
-        comp = policy.compressor
         rate = M.rate_bps(p, h2, ctl.bandwidth, ctl.noise_w_hz)
         budget_bits = tau * rate * okf
-        ckey, sub = jax.random.split(state.ckey)
-        dev_keys = jax.random.split(sub, n)
-        upload, cstate, cstats = jax.vmap(comp.compress)(
-            g_new, budget_bits, CompressorState(error=state.e_n, key=dev_keys)
+        upload, e_after, cstats, ckey = compress_uploads(
+            policy.compressor, g_new, state.e_n, state.ckey, budget_bits, n
         )
-        e_after = cstate.error
         k_actual = cstats["k"]
         bits = cstats["bits"] * okf
         b_used = cstats["b"] * okf

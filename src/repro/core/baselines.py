@@ -24,6 +24,10 @@ comparison of how the same tau*A(p) bit budget is spent:
                 sparsification (`compression.qsgd`).
 9. fixed-kb   — static (keep-fraction, bit-width) targets clipped to the
                 budget (`compression.topk.FixedKbCompressor`).
+10. MADS-topk — the Proposition-1 spend routed through the codec API
+                (`compression.topk.TopKCompressor` at u=value_bits): the
+                codec twin of plain MADS, used by the distributed parity
+                suite and as the topk row of codec sweeps.
 """
 from __future__ import annotations
 
@@ -33,6 +37,7 @@ from repro.compression import (
     FixedKbCompressor,
     JointCompressor,
     QSGDCompressor,
+    TopKCompressor,
 )
 from repro.core.afl import Policy
 from repro.core.mads import MadsController
@@ -126,13 +131,34 @@ def apply_relays(zeta: np.ndarray, tau: np.ndarray, p_relay: float = 0.3,
 
 
 def mads_joint(s: int, fl) -> Policy:
-    """MADS power + the closed-form joint (k, b) codec."""
+    """MADS power + the closed-form joint (k, b) codec.
+
+    ``fl.per_layer_budget`` upgrades the single global split to per-leaf
+    (k_l, b_l) pairs (greedy water-filling; `compression.perlayer`)."""
     return Policy(
         name="mads-joint",
         controller=_controller(s, fl),
         compressor=JointCompressor(
             s=s, method=fl.sparsifier, sample=fl.sample_size,
             b_grid=tuple(range(fl.compress_b_min, fl.compress_b_max + 1)),
+            per_layer=fl.per_layer_budget,
+        ),
+    )
+
+
+def mads_topk(s: int, fl) -> Policy:
+    """MADS power + the top-k codec at the paper's value width.
+
+    The codec twin of plain ``mads``: identical spend (Proposition 1 at
+    u = fl.value_bits) but routed through the ``Compressor`` API — the
+    apples-to-apples topk row of codec comparisons, and the policy the
+    distributed parity suite pins against the seed path."""
+    return Policy(
+        name="mads-topk",
+        controller=_controller(s, fl),
+        compressor=TopKCompressor(
+            s=s, method=fl.sparsifier, sample=fl.sample_size,
+            u=fl.value_bits,
         ),
     )
 
@@ -180,6 +206,7 @@ ALL = {
     "fedmobile": fedmobile,
     "mads-noef": mads_no_ef,
     "mads-joint": mads_joint,
+    "mads-topk": mads_topk,
     "qsgd": qsgd,
     "fixed-kb": fixed_kb,
 }

@@ -14,6 +14,16 @@ The federated mapping at pod scale (DESIGN.md §3/§5):
 * MADS control (Propositions 1-2) runs per client on scalar contact inputs;
   S(.) is the sampled-quantile threshold mask (static shapes; DESIGN.md §3),
   through the ``sparsify_ef`` fused kernel path on TPU.
+* any ``repro.compression`` codec rides the same step: pass ``compressor``
+  and the round spends ``tau * A(p)`` through it instead of the fixed-u
+  sparsify path, with the error-feedback memory ``e_n`` and a PRNG carry
+  (``DistAflState.ckey``) threading the ``CompressorState`` as sharded
+  pytrees.  Shard-safety of the codec's threshold/amax is the sampled
+  strided-sample contract (core/README.md): construct codecs with
+  ``method="sampled"`` at scale so GSPMD never all-gathers the model.
+  The invocation is ``core.afl.compress_uploads`` — the SAME function the
+  single-host engines call — so uploads are bit-identical across paths
+  (tests/test_distributed_compression.py).
 
 ``make_afl_train_system`` returns everything the launcher/dry-run needs:
 the step fn, state/input shardings, and an abstract state initialiser.
@@ -27,7 +37,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compression.base import Compressor
+from repro.core import mads as M
 from repro.core import sparsify as SP
+from repro.core.afl import compress_uploads
 from repro.core.mads import MadsController
 from repro.sharding import rules as R
 
@@ -41,6 +54,7 @@ class DistAflState(NamedTuple):
     q: jax.Array  # (N,)
     energy: jax.Array  # (N,)
     rnd: jax.Array
+    ckey: jax.Array  # PRNG carry for stochastic codecs (repro/compression)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,8 +94,32 @@ def state_shardings(model, mesh: Mesh, dcfg: DistConfig, rules=None):
     rep = NamedSharding(mesh, P())
     return DistAflState(
         w=w_sh, w_n=cl_sh, g_n=cl_sh, e_n=cl_sh,
-        kappa=rep, q=rep, energy=rep, rnd=rep,
+        kappa=rep, q=rep, energy=rep, rnd=rep, ckey=rep,
     )
+
+
+def client_state_shardings(state: DistAflState, mesh: Mesh) -> DistAflState:
+    """Leading-client-axis sharding spec for host-device parity runs.
+
+    The global model and scalars replicate; the client-stacked trees take
+    the mesh's ``data`` axis on their leading dim.  This is the spec the
+    parity suite and ``bench_compression --mesh`` ``device_put`` with —
+    production parameter sharding is ``state_shardings`` above.
+    """
+    rep = NamedSharding(mesh, P())
+    cl = NamedSharding(mesh, P("data"))
+    return DistAflState(
+        w=jax.tree.map(lambda l: rep, state.w),
+        w_n=jax.tree.map(lambda l: cl, state.w_n),
+        g_n=jax.tree.map(lambda l: cl, state.g_n),
+        e_n=jax.tree.map(lambda l: cl, state.e_n),
+        kappa=rep, q=rep, energy=rep, rnd=rep, ckey=rep,
+    )
+
+
+def _key_struct():
+    """ShapeDtypeStruct of a typed PRNG key without touching devices."""
+    return jax.eval_shape(lambda: jax.random.key(0))
 
 
 def abstract_state(model, dcfg: DistConfig):
@@ -100,6 +138,7 @@ def abstract_state(model, dcfg: DistConfig):
         q=jax.ShapeDtypeStruct((n,), f32),
         energy=jax.ShapeDtypeStruct((n,), f32),
         rnd=jax.ShapeDtypeStruct((), i32),
+        ckey=_key_struct(),
     )
 
 
@@ -115,6 +154,9 @@ def init_state(model, dcfg: DistConfig, rng) -> DistAflState:
         w=w, w_n=stack(w), g_n=zeros(w), e_n=zeros(w),
         kappa=jnp.zeros((n,), jnp.int32), q=jnp.zeros((n,), jnp.float32),
         energy=jnp.zeros((n,), jnp.float32), rnd=jnp.zeros((), jnp.int32),
+        # same derivation as afl.afl_init so the two engines' codecs draw
+        # identical dither streams from the same seed
+        ckey=jax.random.fold_in(rng, 0x5EED),
     )
 
 
@@ -128,8 +170,18 @@ def _split_clients(batch, n: int):
     return jax.tree.map(f, batch)
 
 
-def make_afl_train_step(model, cfg, dcfg: DistConfig, controller: MadsController):
-    """Builds the jittable distributed AFL round."""
+def make_afl_train_step(model, cfg, dcfg: DistConfig, controller: MadsController,
+                        compressor: Compressor | None = None):
+    """Builds the jittable distributed AFL round.
+
+    ``compressor``: optional ``repro.compression`` codec; when given, the
+    upload stage is the codec spending the realised contact capacity
+    ``tau * A(p)`` (Proposition 1's left-hand side) with error feedback and
+    the PRNG carry threaded through ``DistAflState`` — the same
+    ``compress_uploads`` call as the single-host engines, so metrics and
+    payloads match.  When None, the legacy fixed-u sampled-threshold path
+    runs.
+    """
     n = dcfg.num_clients
     eta = dcfg.learning_rate
 
@@ -159,9 +211,24 @@ def make_afl_train_step(model, cfg, dcfg: DistConfig, controller: MadsController
         k = k * okf
         energy = energy * okf
 
-        upload, e_after, k_actual = jax.vmap(
-            lambda t, kk: SP.sparsify_tree(t, kk, method="sampled", sample=dcfg.sample_size)
-        )(x, k)
+        if compressor is not None:
+            rate = M.rate_bps(p, h2, controller.bandwidth,
+                              controller.noise_w_hz)
+            budget_bits = tau * rate * okf
+            upload, e_after, cstats, ckey = compress_uploads(
+                compressor, g_new, state.e_n, state.ckey, budget_bits, n
+            )
+            k_actual = cstats["k"]
+            bits = cstats["bits"] * okf
+            b_used = cstats["b"] * okf
+        else:
+            ckey = state.ckey
+            upload, e_after, k_actual = jax.vmap(
+                lambda t, kk: SP.sparsify_tree(t, kk, method="sampled",
+                                               sample=dcfg.sample_size)
+            )(x, k)
+            bits = SP.bits_for_k(k_actual, controller.s, controller.u) * okf
+            b_used = jnp.full_like(k_actual, float(controller.u)) * okf
 
         # MES aggregation: contract the client axis (hierarchical all-reduce)
         udt = jnp.dtype(dcfg.upload_dtype)
@@ -195,16 +262,20 @@ def make_afl_train_step(model, cfg, dcfg: DistConfig, controller: MadsController
 
         metrics = {
             "k": k_actual * okf,
+            "success": (k_actual > 0).astype(jnp.float32) * okf,
             "power": p * okf,
             "energy": energy,
             "theta": theta,
             "uploads": okf,
-            "upload_bits": SP.bits_for_k(k_actual, controller.s, controller.u) * okf,
+            "bits": bits,  # realised payload (<= tau*A budget; eq. 7c)
+            "b": b_used,  # value bit-width on the wire (u, or the codec's b*)
+            "upload_bits": bits,  # legacy alias (pre-codec dashboards)
         }
         return (
             DistAflState(
                 w=w_new, w_n=w_n_new, g_n=g_n_new, e_n=e_n_new,
                 kappa=kappa_new, q=q_new, energy=state.energy + energy, rnd=r,
+                ckey=ckey,
             ),
             metrics,
         )
@@ -220,6 +291,10 @@ def run_afl_rounds(step, state, provider, batch_fn, budgets,
     normally ``repro.scenarios.ScenarioProvider`` — and ``batch_fn(r)``
     returns the round's global batch.  Returns (state, metrics history).
     """
+    # budgets are round-invariant: wrap/transfer ONCE, not per round (the
+    # same host->device churn bug fixed in core/runner.py in PR 2)
+    budgets = budgets if isinstance(budgets, jax.Array) else jnp.asarray(
+        budgets, jnp.float32)
     history = []
     for r, (zeta, tau, h2) in enumerate(provider):
         if rounds is not None and r >= rounds:
@@ -234,17 +309,20 @@ def run_afl_rounds(step, state, provider, batch_fn, budgets,
 
 
 def make_afl_train_system(model, cfg, mesh: Mesh, dcfg: DistConfig | None = None,
-                          rules=None, controller: MadsController | None = None):
+                          rules=None, controller: MadsController | None = None,
+                          compressor: Compressor | None = None):
     """Step + shardings bundle for the launcher / dry-run."""
     dcfg = dcfg or DistConfig(num_clients=mesh_num_clients(mesh))
     controller = controller or MadsController(s=model.num_params())
-    step = make_afl_train_step(model, cfg, dcfg, controller)
+    step = make_afl_train_step(model, cfg, dcfg, controller,
+                               compressor=compressor)
     st_sh = state_shardings(model, mesh, dcfg, rules)
     rep = NamedSharding(mesh, P())
     return {
         "step": step,
         "dcfg": dcfg,
         "controller": controller,
+        "compressor": compressor,
         "state_shardings": st_sh,
         "scalar_sharding": rep,
         "abstract_state": lambda: abstract_state(model, dcfg),

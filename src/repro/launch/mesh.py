@@ -35,6 +35,46 @@ def make_test_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes)
 
 
+def force_host_device_count(n: int) -> None:
+    """Simulate ``n`` host devices (CI meshes, parity suites, --mesh flags).
+
+    Must run before the jax backend initialises (device count is fixed at
+    first backend use).  Prefers the ``jax_num_cpu_devices`` config of
+    newer jax; on older versions falls back to the
+    ``--xla_force_host_platform_device_count`` XLA flag, which the lazily
+    initialised backend still honours post-import.
+    """
+    import os
+
+    try:
+        jax.config.update("jax_num_cpu_devices", n)
+        return
+    except Exception:  # pragma: no cover - depends on installed jax
+        pass
+    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+             if "host_platform_device_count" not in f]
+    flags.append(f"--xla_force_host_platform_device_count={n}")
+    os.environ["XLA_FLAGS"] = " ".join(flags)
+
+
+def make_client_mesh(num_clients: int):
+    """(data, model) mesh for the distributed AFL step on host devices.
+
+    The ``data`` axis (which carries the stacked client axis of
+    ``core.distributed``) takes the largest device count dividing
+    ``num_clients``; ``model`` stays 1 — CPU parity runs shard clients,
+    not parameters.  Returns None on a single device.
+    """
+    from jax.sharding import Mesh
+    import numpy as np
+
+    devs = jax.devices()
+    use = max(k for k in range(1, len(devs) + 1) if num_clients % k == 0)
+    if use <= 1:
+        return None
+    return Mesh(np.asarray(devs[:use]).reshape(use, 1), ("data", "model"))
+
+
 def make_seed_mesh(num_seeds: int):
     """1-D mesh for the experiment engine's seed axis (repro/experiments).
 

@@ -12,6 +12,15 @@ contact bit budget is best spent; see repro/compression):
         --arch resnet9-cifar10 --policies mads,mads-joint,qsgd,fixed-kb \
         --speeds 10 --seeds 3 --rounds 60 --out runs/codecs
 
+``--codec`` is shorthand for a single codec policy (topk | joint | qsgd |
+fixed-kb), ``--per-layer`` upgrades the joint codec to per-leaf (k_l, b_l)
+budgets, and ``--mesh N`` forces N simulated host devices so the seed axis
+shards (CI-scale stand-in for a real mesh):
+
+    PYTHONPATH=src python -m repro.launch.sweep \
+        --arch resnet9-cifar10 --codec joint --per-layer --mesh 2 \
+        --seeds 2 --rounds 20 --out runs/perlayer
+
 Every (policy, mobility, speed) group runs its seeds in ONE vmapped
 compiled program (repro/experiments); completed cells found in --out are
 skipped, so an interrupted sweep resumes.  Results: per-cell npz histories
@@ -66,11 +75,29 @@ def run_sweep(grid: ExperimentGrid, store: ResultsStore, model, cfg, shard,
     return store.table(grid, metric)
 
 
+# --codec shorthand -> the policy (MADS power, codec-only difference)
+CODEC_POLICIES = {
+    "topk": "mads-topk",
+    "joint": "mads-joint",
+    "qsgd": "qsgd",
+    "fixed-kb": "fixed-kb",
+}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="resnet9-cifar10")
     ap.add_argument("--policies", default="mads,afl-spar,afl",
                     help="comma-separated subset of: " + ",".join(BL.ALL))
+    ap.add_argument("--codec", choices=sorted(CODEC_POLICIES),
+                    help="single-codec shorthand; overrides --policies")
+    ap.add_argument("--per-layer", action="store_true",
+                    help="joint codec: per-leaf (k_l, b_l) bit budgets "
+                         "(repro/compression/perlayer.py)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help=">1: force this many simulated host devices "
+                         "(must run before jax initialises; the seed axis "
+                         "shards over them when divisible)")
     ap.add_argument("--mobility", default="exponential",
                     help="comma-separated mobility models "
                          "(exponential|rwp|gauss_markov|manhattan|hotspot|static)")
@@ -101,6 +128,14 @@ def main() -> None:
     ap.add_argument("--out", default="runs/sweep")
     args = ap.parse_args()
 
+    if args.mesh > 1:
+        # before any jax device use — the backend initialises lazily
+        from repro.launch.mesh import force_host_device_count
+
+        force_host_device_count(args.mesh)
+    if args.codec:
+        args.policies = CODEC_POLICIES[args.codec]
+
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -117,6 +152,7 @@ def main() -> None:
         sparsifier="exact" if model.num_params() < 2_000_000 else "sampled",
         fixed_k_frac=args.fixed_k_frac, fixed_bits=args.fixed_bits,
         compress_b_min=args.b_range[0], compress_b_max=args.b_range[1],
+        per_layer_budget=args.per_layer,
     )
     grid = ExperimentGrid(
         policies=tuple(args.policies.split(",")),

@@ -40,14 +40,19 @@ CODECS = [
     TopKCompressor(s=S),
     TopKCompressor(s=S, u=8),
     JointCompressor(s=S),
+    JointCompressor(s=S, per_layer=True),
     QSGDCompressor(s=S),
     FixedKbCompressor(s=S, k_frac=0.1, b=8),
 ]
 BUDGETS = [0.0, 33.0, 50.0, 500.0, 5000.0, 50_000.0, 1e7]
 
 
-@pytest.mark.parametrize("comp", CODECS, ids=lambda c: type(c).__name__
-                         + (f"_u{c.u}" if hasattr(c, "u") else ""))
+def _codec_id(c):
+    return (type(c).__name__ + (f"_u{c.u}" if hasattr(c, "u") else "")
+            + ("_perlayer" if getattr(c, "per_layer", False) else ""))
+
+
+@pytest.mark.parametrize("comp", CODECS, ids=_codec_id)
 def test_realized_bits_within_budget(comp):
     """Acceptance: realised upload bits never exceed tau*A for ANY budget."""
     state = init_state(TREE, jax.random.key(0))
@@ -57,8 +62,7 @@ def test_realized_bits_within_budget(comp):
         assert 0.0 <= float(stats["k"]) <= S
 
 
-@pytest.mark.parametrize("comp", CODECS, ids=lambda c: type(c).__name__
-                         + (f"_u{c.u}" if hasattr(c, "u") else ""))
+@pytest.mark.parametrize("comp", CODECS, ids=_codec_id)
 def test_error_feedback_identity(comp):
     """payload + new error == signal + old error (nothing is lost)."""
     state = init_state(TREE, jax.random.key(1))

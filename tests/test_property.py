@@ -7,6 +7,11 @@ import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
+from repro.compression.perlayer import (
+    solve_kb_per_leaf,
+    split_score,
+    uniform_split,
+)
 from repro.core import sparsify as SP
 from repro.core import theory as T
 from repro.launch import roofline as RL
@@ -99,6 +104,58 @@ def test_roofline_collective_factors_positive(g, nelem):
     assert stats.total_bytes >= 0
     expected = 2.0 * (g - 1) / g * nelem * 2
     np.testing.assert_allclose(stats.bytes_by_kind["all-reduce"], expected)
+
+
+B_GRID = tuple(range(2, 17))
+
+
+@settings(**SET)
+@given(
+    budget=st.floats(0.0, 1e7),
+    data=st.data(),
+)
+def test_per_leaf_budget_solver_respects_global_budget(budget, data):
+    """For random leaf-size/energy profiles: the realised per-leaf bits
+    (floored k, per-leaf fp32 scales included) never exceed the global
+    budget, k stays in [0, s_l], and b is drawn from the grid."""
+    nleaves = data.draw(st.integers(1, 6))
+    sizes = tuple(data.draw(st.integers(1, 5000)) for _ in range(nleaves))
+    energies = jnp.asarray(
+        [data.draw(st.floats(0.0, 1e3)) for _ in range(nleaves)], jnp.float32
+    )
+    lam = 14
+    k, b = solve_kb_per_leaf(jnp.float32(budget), sizes, energies, lam,
+                             B_GRID)
+    k, b = np.asarray(k, np.float64), np.asarray(b, np.float64)
+    bits = np.sum(np.floor(k) * (b + lam) + 32.0 * (k > 0))
+    # f32 arithmetic inside the solver: allow one ulp of the budget
+    assert bits <= budget * (1 + 1e-6) + 1e-3, (bits, budget, sizes)
+    assert np.all(k >= 0) and np.all(k <= np.asarray(sizes))
+    assert all(float(bb) in B_GRID for bb in b)
+
+
+@settings(**SET)
+@given(
+    budget=st.floats(0.0, 1e7),
+    data=st.data(),
+)
+def test_per_leaf_split_never_scores_below_global(budget, data):
+    """The water-filled split's retained-useful-energy score is >= the
+    global single-(k, b) split's on every profile (the solver falls back
+    to the uniform split whenever greedy would lose, so this is exact)."""
+    nleaves = data.draw(st.integers(1, 6))
+    sizes = tuple(data.draw(st.integers(1, 5000)) for _ in range(nleaves))
+    energies = jnp.asarray(
+        [data.draw(st.floats(0.0, 1e3)) for _ in range(nleaves)], jnp.float32
+    )
+    lam = 14
+    sz = jnp.asarray(sizes, jnp.float32)
+    k, b = solve_kb_per_leaf(jnp.float32(budget), sizes, energies, lam,
+                             B_GRID)
+    k_u, b_u = uniform_split(jnp.float32(budget), sizes, lam, B_GRID)
+    per_layer = float(split_score(k, b, sz, energies))
+    global_ = float(split_score(k_u, b_u, sz, energies))
+    assert per_layer >= global_ - 1e-7, (per_layer, global_, sizes)
 
 
 @settings(**SET)

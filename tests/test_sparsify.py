@@ -76,6 +76,31 @@ def test_sparsify_error_bounded_by_lemma3_shape():
     assert float(jnp.sum(err**2)) <= (1 - k / 8192) * float(jnp.sum(x**2)) + 1e-5
 
 
+def test_sampled_threshold_agrees_across_shard_layouts():
+    """The sharded-threshold contract (core/README.md): ``_strided_sample``
+    draws a different strided subset for every leaf layout, so the sampled
+    threshold moves between shard layouts — but only within the documented
+    quantile standard error (std of the realised selection count is
+    ~ sqrt(k s / m), the binomial error of the ~k m / s sample points above
+    the cutoff; the same model behind ``Compressor.spend``'s backoff)."""
+    n = 1 << 18
+    flat = np.asarray(RNG.normal(0, 1, n), np.float32)
+    k, m = 0.05 * n, 8192
+    layouts = [
+        flat,                      # 1-D (the concat view)
+        flat.reshape(512, 512),    # square
+        flat.reshape(1024, 256),   # tall: leading dim strided first
+        flat.reshape(64, 64, 64),  # 3-D
+        flat.reshape(256, 1024).T.copy(),  # transposed storage order
+    ]
+    se = np.sqrt(k * n / m)
+    for a in layouts:
+        t = SP.tree_threshold({"w": jnp.asarray(a)}, k, method="sampled",
+                              sample=m)
+        realised = float(np.sum(np.abs(flat) >= float(t)))
+        assert abs(realised - k) <= 4 * se, (a.shape, realised, k, se)
+
+
 def test_quantize_values_roundtrip_and_noop():
     x = jnp.asarray(RNG.normal(0, 2, 512), jnp.float32)
     same = SP.quantize_values(x, 32)
