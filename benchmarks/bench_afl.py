@@ -9,6 +9,9 @@ cadence) through the three execution paths at N=20 and N=100 devices:
   syncs, eager eval).
 * ``afl_scan_nX``  — ``experiments.run_afl_scanned``: the whole run as one
   compiled ``lax.scan`` program (steady-state, post-compile).
+* ``afl_scan_telem_nX`` — the scan path with the built-in telemetry
+  registry (``repro.telemetry.AFL_REGISTRY``) threaded through the carry;
+  its ``overhead_vs_scan`` derived metric is the instrumentation cost.
 * ``afl_vmapSX_nX`` — ``experiments.run_seed_batch``: 8 seeds vmapped into
   one program; rounds/sec counts all seeds' rounds.
 
@@ -31,6 +34,7 @@ from repro.core.runner import run_afl
 from repro.data import DeviceLoader, SyntheticTrajectories
 from repro.experiments import DataShard, run_afl_scanned, run_seed_batch
 from repro.models.registry import build_model
+from repro.telemetry import AFL_REGISTRY
 
 EVAL_EVERY = 5
 N_SEEDS = 8
@@ -85,6 +89,20 @@ def _bench(n_devices: int, rounds: int):
         f"rounds_per_s={rounds / scan_wall:.1f}"
         f";speedup_vs_loop={loop_wall / scan_wall:.1f}x"))
 
+    # scanned engine with the built-in metric registry threaded through the
+    # scan carry — the telemetry overhead row (acceptance gate: within 5%
+    # of the plain scan; histograms accumulate on device, fetched once)
+    run_afl_scanned(model, cfg, fl, "mads", shard, ev, rounds=rounds,
+                    eval_every=EVAL_EVERY, telemetry=AFL_REGISTRY)
+    t0 = time.time()
+    run_afl_scanned(model, cfg, fl, "mads", shard, ev, rounds=rounds,
+                    eval_every=EVAL_EVERY, seed=1, telemetry=AFL_REGISTRY)
+    telem_wall = time.time() - t0
+    rows.append(csv_row(
+        f"afl_scan_telem_n{n_devices}", telem_wall / rounds * 1e6,
+        f"rounds_per_s={rounds / telem_wall:.1f}"
+        f";overhead_vs_scan={telem_wall / scan_wall:.2f}x"))
+
     # seed-vmapped batch (8 runs in one program; count every seed's rounds)
     seeds = tuple(range(N_SEEDS))
     run_seed_batch(model, cfg, fl, "mads", shard, ev, seeds=seeds,
@@ -102,7 +120,9 @@ def _bench(n_devices: int, rounds: int):
     return rows
 
 
-def run():
+def run(smoke: bool = False):
+    if smoke:
+        return _bench(8, 12)
     return _bench(20, 60) + _bench(100, 30)
 
 

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
 from repro.configs import FLConfig, get_config
@@ -62,6 +63,8 @@ def run_policy(cfg, model, dev, ev, policy: str, rounds: int, **fl_over):
     t0 = time.time()
     res = run_afl(model, cfg, fl, policy, loader, ev, rounds=rounds,
                   eval_every=max(rounds // 2, 1))
+    # dispatch is async: block on the final state so wall covers the work
+    jax.block_until_ready(res.state)
     wall = time.time() - t0
     return res, wall
 

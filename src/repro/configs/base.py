@@ -194,6 +194,11 @@ class FLConfig:
     # joint codec: solve (k_l, b_l) per pytree leaf by greedy water-filling
     # against the same tau*A budget (repro/compression/perlayer.py)
     per_layer_budget: bool = False
+    # telemetry (repro/telemetry): True enables the built-in AFL metric
+    # registry (staleness/bits/tau/k/b histograms + round counters) in the
+    # runners; consumed host-side when resolving the registry, the compiled
+    # round never reads it
+    telemetry: bool = False
     # non-iid
     dirichlet_rho: float = 0.5
     seed: int = 0

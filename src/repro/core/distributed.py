@@ -171,7 +171,8 @@ def _split_clients(batch, n: int):
 
 
 def make_afl_train_step(model, cfg, dcfg: DistConfig, controller: MadsController,
-                        compressor: Compressor | None = None):
+                        compressor: Compressor | None = None,
+                        telemetry=None):
     """Builds the jittable distributed AFL round.
 
     ``compressor``: optional ``repro.compression`` codec; when given, the
@@ -181,11 +182,18 @@ def make_afl_train_step(model, cfg, dcfg: DistConfig, controller: MadsController
     ``compress_uploads`` call as the single-host engines, so metrics and
     payloads match.  When None, the legacy fixed-u sampled-threshold path
     runs.
+
+    ``telemetry``: optional ``repro.telemetry.MetricRegistry``.  When
+    given, the step takes an extra trailing telemetry-state pytree and
+    returns ``(state, metrics, tstate)`` — the accumulation rides the
+    pjit program (replicated; histogram counts are exact integers, so the
+    sharded client-axis reduce is bit-identical to single host).
     """
     n = dcfg.num_clients
     eta = dcfg.learning_rate
 
-    def step(state: DistAflState, batch, zeta, tau, h2, budgets):
+    def step(state: DistAflState, batch, zeta, tau, h2, budgets,
+             tstate=None):
         r = state.rnd + 1
         theta = (r - state.kappa).astype(jnp.float32)
 
@@ -271,51 +279,66 @@ def make_afl_train_step(model, cfg, dcfg: DistConfig, controller: MadsController
             "b": b_used,  # value bit-width on the wire (u, or the codec's b*)
             "upload_bits": bits,  # legacy alias (pre-codec dashboards)
         }
-        return (
-            DistAflState(
-                w=w_new, w_n=w_n_new, g_n=g_n_new, e_n=e_n_new,
-                kappa=kappa_new, q=q_new, energy=state.energy + energy, rnd=r,
-                ckey=ckey,
-            ),
-            metrics,
+        new_state = DistAflState(
+            w=w_new, w_n=w_n_new, g_n=g_n_new, e_n=e_n_new,
+            kappa=kappa_new, q=q_new, energy=state.energy + energy, rnd=r,
+            ckey=ckey,
         )
+        if telemetry is not None:
+            from repro.telemetry import record_round
+
+            return new_state, metrics, record_round(telemetry, tstate,
+                                                    metrics, tau)
+        return new_state, metrics
 
     return step
 
 
 def run_afl_rounds(step, state, provider, batch_fn, budgets,
-                   rounds: int | None = None):
+                   rounds: int | None = None, telemetry=None, tstate=None):
     """Drive a distributed AFL step from a ScenarioProvider.
 
     ``provider`` is anything yielding per-round (zeta, tau, h2) triples —
     normally ``repro.scenarios.ScenarioProvider`` — and ``batch_fn(r)``
-    returns the round's global batch.  Returns (state, metrics history).
+    returns the round's global batch.  Returns (state, metrics history);
+    with ``telemetry`` (the registry the step was built with) the
+    device-resident telemetry state is threaded through every step and
+    returned as a third element (fetch it once with ``telemetry.fetch``).
     """
     # budgets are round-invariant: wrap/transfer ONCE, not per round (the
     # same host->device churn bug fixed in core/runner.py in PR 2)
     budgets = budgets if isinstance(budgets, jax.Array) else jnp.asarray(
         budgets, jnp.float32)
+    if telemetry is not None and tstate is None:
+        tstate = telemetry.init_state()
     history = []
     for r, (zeta, tau, h2) in enumerate(provider):
         if rounds is not None and r >= rounds:
             break
-        state, m = step(
+        args = (
             state, batch_fn(r), jnp.asarray(zeta, jnp.float32),
             jnp.asarray(tau, jnp.float32), jnp.asarray(h2, jnp.float32),
             budgets,
         )
+        if telemetry is not None:
+            state, m, tstate = step(*args, tstate)
+        else:
+            state, m = step(*args)
         history.append(m)
+    if telemetry is not None:
+        return state, history, tstate
     return state, history
 
 
 def make_afl_train_system(model, cfg, mesh: Mesh, dcfg: DistConfig | None = None,
                           rules=None, controller: MadsController | None = None,
-                          compressor: Compressor | None = None):
+                          compressor: Compressor | None = None,
+                          telemetry=None):
     """Step + shardings bundle for the launcher / dry-run."""
     dcfg = dcfg or DistConfig(num_clients=mesh_num_clients(mesh))
     controller = controller or MadsController(s=model.num_params())
     step = make_afl_train_step(model, cfg, dcfg, controller,
-                               compressor=compressor)
+                               compressor=compressor, telemetry=telemetry)
     st_sh = state_shardings(model, mesh, dcfg, rules)
     rep = NamedSharding(mesh, P())
     return {
@@ -323,8 +346,12 @@ def make_afl_train_system(model, cfg, mesh: Mesh, dcfg: DistConfig | None = None
         "dcfg": dcfg,
         "controller": controller,
         "compressor": compressor,
+        "telemetry": telemetry,
         "state_shardings": st_sh,
         "scalar_sharding": rep,
+        # telemetry state replicates (histogram counts are integer-exact,
+        # so the client-axis reduce commits the same value on every shard)
+        "telemetry_sharding": rep,
         "abstract_state": lambda: abstract_state(model, dcfg),
         "init_state": lambda rng: init_state(model, dcfg, rng),
     }

@@ -15,6 +15,7 @@ Two execution engines share this entry point:
 from __future__ import annotations
 
 import dataclasses
+from contextlib import nullcontext
 from typing import Optional
 
 import jax
@@ -25,14 +26,13 @@ from repro.channel import WirelessChannel
 from repro.core import baselines as BL
 from repro.core.afl import afl_init, afl_round
 from repro.scenarios import ScenarioProvider
+from repro.telemetry import AFL_REGISTRY, HIST_KEYS, jit_record
 from repro.utils import get_logger
 
 log = get_logger("repro.runner")
 
-HIST_KEYS = (
-    "round", "eval", "uploads", "k_mean", "energy", "theta_mean",
-    "power_mean", "bits_mean"
-)
+__all__ = ["HIST_KEYS", "RunResult", "run_afl"]  # HIST_KEYS re-exported
+# from repro.telemetry.metrics — the single source of truth for both engines
 
 
 @dataclasses.dataclass
@@ -41,6 +41,15 @@ class RunResult:
     history: dict  # lists per metric
     final_eval: float
     state: object
+    telemetry: Optional[dict] = None  # fetched MetricRegistry snapshot
+
+
+def resolve_telemetry(fl, telemetry):
+    """The run's MetricRegistry: an explicit registry wins; otherwise the
+    FLConfig ``telemetry`` knob turns on the built-in AFL registry."""
+    if telemetry is not None:
+        return telemetry
+    return AFL_REGISTRY if getattr(fl, "telemetry", False) else None
 
 
 def make_eval_fn(model, cfg):
@@ -124,9 +133,12 @@ def run_afl(
     schedule=None,
     log_progress: bool = False,
     engine: str = "loop",
+    telemetry=None,
+    tracer=None,
 ) -> RunResult:
     rounds = rounds or fl.rounds
     seed = fl.seed if seed is None else seed
+    telemetry = resolve_telemetry(fl, telemetry)
 
     if engine == "scan":
         from repro.experiments.scan_engine import run_afl_scanned
@@ -134,7 +146,7 @@ def run_afl(
         return run_afl_scanned(
             model, cfg, fl, policy_name, loader, eval_batch, rounds=rounds,
             eval_every=eval_every, seed=seed, schedule=schedule,
-            log_progress=log_progress,
+            log_progress=log_progress, telemetry=telemetry, tracer=tracer,
         )
     if engine != "loop":
         raise ValueError(f"unknown engine {engine!r}; known: loop, scan")
@@ -149,25 +161,38 @@ def run_afl(
         {k: jnp.asarray(v) for k, v in eval_batch.items()}
     )
     hist: dict = {k: [] for k in HIST_KEYS}
+    tstate = telemetry.init_state() if telemetry is not None else None
+    record = jit_record(telemetry) if telemetry is not None else None
 
     tot_uploads = tot_k = tot_power = tot_theta = tot_bits = 0.0
     n = fl.num_devices
     shard_key = loader.seed_key(seed) if hasattr(loader, "seed_key") else None
+    span = tracer.span if tracer is not None else (
+        lambda name, **kw: nullcontext())
     for r in range(rounds):
         batch = _round_batch(loader, r, shard_key)
         zeta_r, tau_r, h2_r = provider.round(r)
-        state, m = afl_round(
-            state, batch, jnp.asarray(zeta_r), jnp.asarray(tau_r),
-            jnp.asarray(h2_r, jnp.float32), budgets,
-            model=model, cfg=cfg, fl=fl, policy=policy,
-        )
+        tau_dev = jnp.asarray(tau_r)
+        # round 0 pays the afl_round jit compile: separate span name so the
+        # compile vs steady-state execute split shows up in the summary
+        with span("compile" if r == 0 else "execute"):
+            state, m = afl_round(
+                state, batch, jnp.asarray(zeta_r), tau_dev,
+                jnp.asarray(h2_r, jnp.float32), budgets,
+                model=model, cfg=cfg, fl=fl, policy=policy,
+            )
+            if telemetry is not None:
+                tstate = record(tstate, m, tau_dev)
+            if tracer is not None:
+                tracer.fence(m)
         tot_uploads += float(jnp.sum(m["success"]))
         tot_k += float(jnp.sum(m["k"]))
         tot_power += float(jnp.sum(m["power"]))
         tot_theta += float(jnp.sum(m["theta"]))
         tot_bits += float(jnp.sum(m["bits"]))
         if (r + 1) % eval_every == 0 or r == rounds - 1:
-            ev = evaluate(model, cfg, state.w, eval_batch)
+            with span("eval"):
+                ev = evaluate(model, cfg, state.w, eval_batch)
             hist["round"].append(r + 1)
             hist["eval"].append(ev)
             hist["uploads"].append(tot_uploads)  # cumulative
@@ -182,4 +207,6 @@ def run_afl(
                     policy_name, r + 1, ev, hist["uploads"][-1],
                     hist["k_mean"][-1], hist["energy"][-1],
                 )
-    return RunResult(policy_name, hist, hist["eval"][-1], state)
+    snapshot = telemetry.fetch(tstate) if telemetry is not None else None
+    return RunResult(policy_name, hist, hist["eval"][-1], state,
+                     telemetry=snapshot)

@@ -31,12 +31,14 @@ log = get_logger("repro.batch")
 
 @lru_cache(maxsize=16)
 def _compiled_vrun(model, cfg, fl, policy, rounds: int, eval_every: int,
-                   sampler):
+                   sampler, telemetry=None):
     """vmapped whole-run program, cached per (model, engine-flags) group."""
     run = make_run_fn(model, cfg, fl, policy, rounds=rounds,
-                      eval_every=eval_every, sampler=sampler)
-    # batched: state0, zeta, tau, h2, budgets, sample_ctx; shared: eval_batch
-    return jax.jit(jax.vmap(run, in_axes=(0, 0, 0, 0, 0, None, 0)))
+                      eval_every=eval_every, sampler=sampler,
+                      telemetry=telemetry)
+    # batched: state0, zeta, tau, h2, budgets, sample_ctx, telemetry state;
+    # shared: eval_batch
+    return jax.jit(jax.vmap(run, in_axes=(0, 0, 0, 0, 0, None, 0, 0)))
 
 
 @lru_cache(maxsize=64)
@@ -82,6 +84,7 @@ def run_seed_batch(
     rounds: Optional[int] = None,
     eval_every: int = 20,
     mesh=None,
+    telemetry=None,
 ) -> list[RunResult]:
     """All ``seeds`` of one grid group in a single compiled execution.
 
@@ -89,8 +92,17 @@ def run_seed_batch(
     mobility traces), stacked to (S, rounds, N) device tensors, and the
     vmapped scan consumes them.  Returns one ``RunResult`` per seed whose
     history matches an independent ``run_afl_scanned`` of that seed.
+
+    ``telemetry``: a ``MetricRegistry`` whose state batches over the seed
+    axis (sharded with the rest when a mesh is given); each RunResult
+    carries its seed's fetched snapshot — merge them with
+    ``repro.telemetry.merge_fetched`` (or on device via
+    ``registry.merge_stacked``).
     """
     rounds = rounds or fl.rounds
+    from repro.core.runner import resolve_telemetry
+
+    telemetry = resolve_telemetry(fl, telemetry)
     policy = BL.ALL[policy_name](model.num_params(), fl)
     epolicy = engine_policy(policy)
 
@@ -108,20 +120,26 @@ def run_seed_batch(
     state0 = _compiled_vinit(model, cfg, efl)(seed_arr)
     sample_keys = _compiled_seed_keys(shard.seed_key)(seed_arr)
     eval_b = jax.device_put({k: jnp.asarray(v) for k, v in eval_batch.items()})
+    ns = len(seeds)
+    tstate0 = (
+        jax.tree.map(lambda l: jnp.zeros((ns,) + l.shape, l.dtype),
+                     telemetry.init_state())
+        if telemetry is not None else {}
+    )
 
-    mesh = _usable_mesh(mesh, len(seeds))
+    mesh = _usable_mesh(mesh, ns)
     if mesh is not None:
-        batched = (state0, zeta, tau, h2, budgets, sample_keys)
+        batched = (state0, zeta, tau, h2, budgets, sample_keys, tstate0)
         batched = jax.device_put(
             batched, NamedSharding(mesh, P(mesh.axis_names[0]))
         )
-        state0, zeta, tau, h2, budgets, sample_keys = batched
+        state0, zeta, tau, h2, budgets, sample_keys, tstate0 = batched
         eval_b = jax.device_put(eval_b, NamedSharding(mesh, P()))
 
     vrun = _compiled_vrun(model, cfg, efl, epolicy, rounds, eval_every,
-                          shard.traced_batch)
-    states, hist_dev = vrun(state0, zeta, tau, h2, budgets, eval_b,
-                            sample_keys)
+                          shard.traced_batch, telemetry)
+    states, hist_dev, tstates = vrun(state0, zeta, tau, h2, budgets, eval_b,
+                                     sample_keys, tstate0)
 
     pts = eval_points(rounds, eval_every)
     hist_np = {k: np.asarray(v) for k, v in hist_dev.items()}  # (S, E)
@@ -129,8 +147,13 @@ def run_seed_batch(
     for i, s in enumerate(seeds):
         hist = {"round": list(pts)}
         hist.update({k: [float(x) for x in v[i]] for k, v in hist_np.items()})
+        snap = (
+            telemetry.fetch(jax.tree.map(lambda l: l[i], tstates))
+            if telemetry is not None else None
+        )
         out.append(RunResult(
             policy_name, hist, hist["eval"][-1],
             jax.tree.map(lambda l: l[i], states),
+            telemetry=snap,
         ))
     return out

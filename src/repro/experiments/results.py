@@ -16,8 +16,8 @@ from typing import Iterable, Optional
 
 import numpy as np
 
-from repro.core.runner import HIST_KEYS as _HIST_KEYS
 from repro.experiments.grid import ExperimentGrid, GridCell
+from repro.telemetry import HIST_KEYS as _HIST_KEYS
 
 
 def mean_ci(values, confidence: float = 0.95) -> tuple[float, float]:

@@ -32,12 +32,13 @@ import numpy as np
 from repro.core import baselines as BL
 from repro.core.afl import afl_init, afl_round
 from repro.core.runner import (
-    HIST_KEYS,
     RunResult,
     build_provider,
     make_eval_fn,
+    resolve_telemetry,
     sample_budgets,
 )
+from repro.telemetry import HIST_KEYS, record_round
 from repro.utils import get_logger
 
 log = get_logger("repro.scan_engine")
@@ -125,33 +126,42 @@ def eval_points(rounds: int, eval_every: int) -> list[int]:
 
 
 def make_run_fn(model, cfg, fl, policy, *, rounds: int, eval_every: int,
-                sampler: Callable):
+                sampler: Callable, telemetry=None):
     """Pure function running a whole AFL experiment in one trace.
 
-    Returns ``run(state0, zeta, tau, h2, budgets, eval_batch, sample_ctx)
-    -> (final_state, hist)`` where ``hist`` maps the loop runner's history
-    keys (except "round") to (num_evals,) arrays.  ``sampler(sample_ctx, r)``
-    yields round r's stacked minibatch: ``DataShard.traced_batch`` with a
-    key context, or ``_prestacked_sampler`` with a (rounds, ...) tensor.
+    Returns ``run(state0, zeta, tau, h2, budgets, eval_batch, sample_ctx,
+    tstate0) -> (final_state, hist, tstate)`` where ``hist`` maps the loop
+    runner's history keys (except "round") to (num_evals,) arrays.
+    ``sampler(sample_ctx, r)`` yields round r's stacked minibatch:
+    ``DataShard.traced_batch`` with a key context, or
+    ``_prestacked_sampler`` with a (rounds, ...) tensor.
+
+    ``telemetry`` (a ``repro.telemetry.MetricRegistry``) threads its
+    accumulation pytree ``tstate0`` through the scan carry —
+    device-resident histograms/counters with no mid-run host sync.  With
+    ``telemetry=None``, pass ``{}`` and the carry slot is empty.
 
     The function is jit- and vmap-friendly: scenario tensors, budgets, the
-    initial state, and the sample context batch over a leading seed axis;
-    eval_batch broadcasts.
+    initial state, the sample context, and the telemetry state batch over
+    a leading seed axis; eval_batch broadcasts.
     """
     n = fl.num_devices
     eval_fn = make_eval_fn(model, cfg)
     pts = eval_points(rounds, eval_every)
     bounds = list(zip([0] + pts[:-1], pts))
 
-    def run(state0, zeta, tau, h2, budgets, eval_batch, sample_ctx):
+    def run(state0, zeta, tau, h2, budgets, eval_batch, sample_ctx,
+            tstate0):
         def body(carry, xs):
-            state, tot = carry
+            state, tot, ts = carry
             r, zeta_r, tau_r, h2_r = xs
             batch = sampler(sample_ctx, r)
             state, m = afl_round(
                 state, batch, zeta_r, tau_r, h2_r, budgets,
                 model=model, cfg=cfg, fl=fl, policy=policy,
             )
+            if telemetry is not None:
+                ts = record_round(telemetry, ts, m, tau_r)
             tot = {
                 "uploads": tot["uploads"] + jnp.sum(m["success"]),
                 "k": tot["k"] + jnp.sum(m["k"]),
@@ -159,9 +169,10 @@ def make_run_fn(model, cfg, fl, policy, *, rounds: int, eval_every: int,
                 "theta": tot["theta"] + jnp.sum(m["theta"]),
                 "bits": tot["bits"] + jnp.sum(m["bits"]),
             }
-            return (state, tot), None
+            return (state, tot, ts), None
 
         state = state0
+        ts = tstate0
         tot = {k: jnp.zeros((), jnp.float32)
                for k in ("uploads", "k", "power", "theta", "bits")}
         hist = {k: [] for k in HIST_KEYS if k != "round"}
@@ -170,7 +181,7 @@ def make_run_fn(model, cfg, fl, policy, *, rounds: int, eval_every: int,
                 jnp.arange(start, stop, dtype=jnp.int32),
                 zeta[start:stop], tau[start:stop], h2[start:stop],
             )
-            (state, tot), _ = jax.lax.scan(body, (state, tot), xs)
+            (state, tot, ts), _ = jax.lax.scan(body, (state, tot, ts), xs)
             up = jnp.maximum(tot["uploads"], 1.0)
             hist["eval"].append(eval_fn(state.w, eval_batch))
             hist["uploads"].append(tot["uploads"])
@@ -179,24 +190,27 @@ def make_run_fn(model, cfg, fl, policy, *, rounds: int, eval_every: int,
             hist["theta_mean"].append(tot["theta"] / (stop * n))
             hist["power_mean"].append(tot["power"] / up)
             hist["bits_mean"].append(tot["bits"] / up)
-        return state, {k: jnp.stack(v) for k, v in hist.items()}
+        return state, {k: jnp.stack(v) for k, v in hist.items()}, ts
 
     return run
 
 
 @lru_cache(maxsize=16)
 def _compiled_run(model, cfg, fl, policy, rounds: int, eval_every: int,
-                  sampler):
+                  sampler, telemetry=None):
     """One jitted program per (model, engine-flags, shapes) group — grid
     cells that share these reuse the compilation (policy *names* are
-    stripped by the grid; see ``grid.engine_policy``).
+    stripped by the grid; see ``grid.engine_policy``).  The telemetry
+    registry is part of the key: runs with and without instrumentation
+    are different XLA programs.
 
     Note: a DataShard sampler key pins that shard's device data for the
     cache entry's lifetime — bounded by the maxsize, but long-lived
     processes cycling many large datasets should prefer fresh processes
     per sweep."""
     run = make_run_fn(model, cfg, fl, policy, rounds=rounds,
-                      eval_every=eval_every, sampler=sampler)
+                      eval_every=eval_every, sampler=sampler,
+                      telemetry=telemetry)
     return jax.jit(run)
 
 
@@ -213,16 +227,21 @@ def run_afl_scanned(
     schedule=None,
     log_progress: bool = False,
     batch_mode: str = "auto",
+    telemetry=None,
+    tracer=None,
 ) -> RunResult:
     """Drop-in replacement for ``runner.run_afl`` running the whole
     experiment as one compiled program.
 
     ``batch_mode``: "shard" samples in-scan from a ``DataShard``;
     "prestack" materialises the DeviceLoader's exact draw sequence up
-    front; "auto" picks by loader type.
+    front; "auto" picks by loader type.  ``telemetry`` threads a
+    ``MetricRegistry`` state through the scan (fetched once at run end
+    into ``RunResult.telemetry``); ``tracer`` records run/fetch spans.
     """
     rounds = rounds or fl.rounds
     seed = fl.seed if seed is None else seed
+    telemetry = resolve_telemetry(fl, telemetry)
     policy = BL.ALL[policy_name](model.num_params(), fl)
 
     provider = build_provider(fl, policy_name, schedule, rounds, seed)
@@ -245,17 +264,28 @@ def run_afl_scanned(
     else:
         raise ValueError(f"unknown batch_mode {batch_mode!r}")
 
+    from contextlib import nullcontext
+
     from repro.experiments.grid import engine_fl, engine_policy
 
+    span = tracer.span if tracer is not None else (
+        lambda name, **kw: nullcontext())
     run = _compiled_run(model, cfg, engine_fl(fl), engine_policy(policy),
-                        rounds, eval_every, sampler)
+                        rounds, eval_every, sampler, telemetry)
     state0 = afl_init(model, cfg, fl, jax.random.key(seed))
     eval_b = jax.device_put({k: jnp.asarray(v) for k, v in eval_batch.items()})
-    state, hist_dev = run(state0, zeta, tau, h2, budgets, eval_b, sample_ctx)
+    tstate0 = telemetry.init_state() if telemetry is not None else {}
+    with span("run"):  # first call per program traces + compiles
+        state, hist_dev, tstate = run(state0, zeta, tau, h2, budgets,
+                                      eval_b, sample_ctx, tstate0)
+        if tracer is not None:
+            tracer.fence(hist_dev)
 
     hist: dict = {"round": eval_points(rounds, eval_every)}
-    for k, v in hist_dev.items():
-        hist[k] = [float(x) for x in np.asarray(v)]
+    with span("fetch"):
+        for k, v in hist_dev.items():
+            hist[k] = [float(x) for x in np.asarray(v)]
+        snapshot = telemetry.fetch(tstate) if telemetry is not None else None
     if log_progress:
         for i, r in enumerate(hist["round"]):
             log.info(
@@ -263,4 +293,5 @@ def run_afl_scanned(
                 policy_name, r, hist["eval"][i], hist["uploads"][i],
                 hist["k_mean"][i], hist["energy"][i],
             )
-    return RunResult(policy_name, hist, hist["eval"][-1], state)
+    return RunResult(policy_name, hist, hist["eval"][-1], state,
+                     telemetry=snapshot)

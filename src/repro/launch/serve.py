@@ -36,6 +36,9 @@ def serve(cfg, model, params, prompts, gen: int, window: int = 0):
         last, cache = model.prefill(params, cfg, prompts)
     else:
         last, cache = model.prefill(params, cfg, prompts, max_seq=max_seq)
+    # async dispatch: block before reading the clock or prefill time
+    # under-counts and leaks into the decode measurement
+    jax.block_until_ready(last)
     t_prefill = time.time() - t0
 
     decode = jax.jit(
@@ -43,6 +46,7 @@ def serve(cfg, model, params, prompts, gen: int, window: int = 0):
     )
     out = []
     tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(tok)
     t0 = time.time()
     for i in range(gen):
         out.append(tok)

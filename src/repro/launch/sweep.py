@@ -29,7 +29,9 @@ skipped, so an interrupted sweep resumes.  Results: per-cell npz histories
 from __future__ import annotations
 
 import argparse
+import os
 import time
+from contextlib import nullcontext
 
 from repro.configs import FLConfig, get_config
 from repro.core import baselines as BL
@@ -42,15 +44,32 @@ from repro.experiments import (
 from repro.launch.mesh import make_seed_mesh
 from repro.launch.train import build_device_data
 from repro.models.registry import build_model
+from repro.telemetry import (
+    AFL_REGISTRY,
+    JsonlSink,
+    PhaseTracer,
+    merge_fetched,
+    to_jsonable,
+)
 from repro.utils import get_logger
 
 log = get_logger("repro.sweep")
 
 
 def run_sweep(grid: ExperimentGrid, store: ResultsStore, model, cfg, shard,
-              eval_batch, mesh=None, metric: str = "eval") -> str:
+              eval_batch, mesh=None, metric: str = "eval", telemetry=None,
+              tracer=None, sink=None) -> str:
     """Execute every pending cell of ``grid`` into ``store``; returns the
-    comparison table."""
+    comparison table.
+
+    ``telemetry`` (a ``repro.telemetry.MetricRegistry``) instruments every
+    group's vmapped run; per-group merged snapshots land in ``sink`` (a
+    ``JsonlSink``) as ``group_metrics`` events plus one sweep-wide
+    ``metrics`` event.  ``tracer`` records one span per executed group.
+    """
+    span = tracer.span if tracer is not None else (
+        lambda name, **kw: nullcontext())
+    snapshots = []
     for policy, mobility, speed, cells in grid.groups():
         todo = store.pending(cells)
         if not todo:
@@ -59,19 +78,34 @@ def run_sweep(grid: ExperimentGrid, store: ResultsStore, model, cfg, shard,
             continue
         fl = grid.fl_for(mobility, speed)
         t0 = time.time()
-        results = run_seed_batch(
-            model, cfg, fl, policy, shard, eval_batch,
-            seeds=[c.seed for c in todo], rounds=grid.rounds,
-            eval_every=grid.eval_every, mesh=mesh,
-        )
+        with span("group", group=cells[0].group_key):
+            results = run_seed_batch(
+                model, cfg, fl, policy, shard, eval_batch,
+                seeds=[c.seed for c in todo], rounds=grid.rounds,
+                eval_every=grid.eval_every, mesh=mesh, telemetry=telemetry,
+            )
         wall = time.time() - t0
         for cell, res in zip(todo, results):
             store.save(cell, res.history,
                        meta={"arch": cfg.name, "rounds": grid.rounds,
                              "wall_s": round(wall / len(todo), 3)})
+        snaps = [r.telemetry for r in results if r.telemetry is not None]
+        if snaps:
+            gsnap = merge_fetched(snaps)
+            snapshots.append(gsnap)
+            if sink is not None:
+                sink.emit({"kind": "group_metrics",
+                           "group": cells[0].group_key,
+                           "seeds": len(todo), **to_jsonable(gsnap)})
         log.info("group %s: %d seeds in %.1fs (%.1f rounds/s)",
                  cells[0].group_key, len(todo), wall,
                  grid.rounds * len(todo) / max(wall, 1e-9))
+    if snapshots:
+        total = merge_fetched(snapshots)
+        if sink is not None:
+            sink.emit({"kind": "metrics", **to_jsonable(total)})
+        if telemetry is not None:
+            log.info("sweep metrics:\n%s", telemetry.summary(total))
     return store.table(grid, metric)
 
 
@@ -125,6 +159,12 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--width", type=int, default=0,
                     help=">0: override d_model (CPU-sized sweeps)")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable the device-resident metric registry "
+                         "(on by default; snapshots land in "
+                         "--out/telemetry.jsonl)")
+    ap.add_argument("--profile-dir", default="",
+                    help="jax.profiler trace dir for the sweep")
     ap.add_argument("--out", default="runs/sweep")
     args = ap.parse_args()
 
@@ -172,9 +212,22 @@ def main() -> None:
     store = ResultsStore(args.out)
     mesh = make_seed_mesh(args.seeds)
 
-    table = run_sweep(grid, store, model, cfg, shard, ev, mesh=mesh)
+    telemetry = None if args.no_telemetry else AFL_REGISTRY
+    tracer = PhaseTracer(profile_dir=args.profile_dir or None)
+    tracer.start()
+    sink = JsonlSink(os.path.join(args.out, "telemetry.jsonl"))
+    try:
+        table = run_sweep(grid, store, model, cfg, shard, ev, mesh=mesh,
+                          telemetry=telemetry, tracer=tracer, sink=sink)
+        sink.extend(tracer.events())
+        if sink.events:  # a fully-resumed sweep must not blank the
+            sink.flush()  # previous invocation's telemetry artifact
+    finally:
+        tracer.stop()
     print(table)
-    log.info("results under %s (cells/*.npz + results.jsonl)", args.out)
+    log.info("group wall clock:\n%s", tracer.summary())
+    log.info("results under %s (cells/*.npz + results.jsonl + "
+             "telemetry.jsonl)", args.out)
 
 
 if __name__ == "__main__":

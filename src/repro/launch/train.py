@@ -33,6 +33,7 @@ from repro.data import (
     dirichlet_partition,
 )
 from repro.models.registry import build_model
+from repro.telemetry import AFL_REGISTRY, JsonlSink, PhaseTracer, to_jsonable
 from repro.utils import get_logger
 
 log = get_logger("repro.train")
@@ -102,6 +103,13 @@ def main() -> None:
     ap.add_argument("--engine", default="scan", choices=["scan", "loop"],
                     help="scan: whole run as one compiled lax.scan program "
                          "(repro/experiments); loop: per-round dispatch")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="device-resident round metrics (repro/telemetry): "
+                         "staleness/bits/tau histograms + counters, written "
+                         "to workdir/telemetry.jsonl")
+    ap.add_argument("--profile-dir", default="",
+                    help="jax.profiler trace dir; also annotates the "
+                         "compile/execute/eval phase spans")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--workdir", default="runs/train")
     args = ap.parse_args()
@@ -117,6 +125,7 @@ def main() -> None:
         mean_contact=args.contact, mean_intercontact=args.intercontact,
         lyapunov_v=args.v_weight, seed=args.seed,
         sparsifier="exact" if model.num_params() < 2_000_000 else "sampled",
+        telemetry=args.telemetry,
     )
     log.info("arch=%s params=%d policy=%s rounds=%d devices=%d",
              cfg.name, model.num_params(), args.policy, args.rounds, args.devices)
@@ -132,14 +141,27 @@ def main() -> None:
         loader = DataShard(dev, fl.batch_size, seed=args.seed)
     else:
         loader = DeviceLoader(dev, fl.batch_size, args.seed)
-    res = run_afl(model, cfg, fl, args.policy, loader, ev,
-                  rounds=args.rounds, eval_every=args.eval_every,
-                  log_progress=True, engine=args.engine)
+
+    tracer = PhaseTracer(profile_dir=args.profile_dir or None)
+    tracer.start()
+    try:
+        res = run_afl(model, cfg, fl, args.policy, loader, ev,
+                      rounds=args.rounds, eval_every=args.eval_every,
+                      log_progress=True, engine=args.engine, tracer=tracer)
+    finally:
+        tracer.stop()
 
     os.makedirs(args.workdir, exist_ok=True)
     save(args.workdir, args.rounds, res.state.w)
     with open(os.path.join(args.workdir, "history.json"), "w") as f:
         json.dump({"args": vars(args), "history": res.history}, f, indent=2)
+    with JsonlSink(os.path.join(args.workdir, "telemetry.jsonl")) as sink:
+        sink.extend(tracer.events())
+        if res.telemetry is not None:
+            sink.emit({"kind": "metrics", **to_jsonable(res.telemetry)})
+    if res.telemetry is not None:
+        print(AFL_REGISTRY.summary(res.telemetry))
+    log.info("phase wall clock:\n%s", tracer.summary())
     log.info("final eval=%.4f; wrote %s", res.final_eval, args.workdir)
 
 

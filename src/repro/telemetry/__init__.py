@@ -1,0 +1,56 @@
+"""Telemetry: device-resident round metrics, phase tracing, exporters.
+
+See README.md here for the metric catalog and the scan/pjit carry
+contract.  Quick map:
+
+* ``metrics``  — ``MetricRegistry`` (counters / gauges / fixed-bin
+  histograms) whose state is a pytree carried through ``lax.scan``, the
+  pjit step, vmapped seeds, and mesh shards; ``AFL_REGISTRY`` +
+  ``record_round`` are the built-in Algorithm-1 instrumentation.
+* ``tracing``  — ``PhaseTracer`` wall-clock spans with
+  ``block_until_ready`` fencing and optional ``jax.profiler`` hooks.
+* ``export``   — atomic JSONL event sink, ``BENCH_<suite>.json``
+  trajectory files (gated by ``tools/bench_compare.py``).
+"""
+from repro.telemetry.export import (
+    JsonlSink,
+    export_bench,
+    load_bench,
+    parse_csv_row,
+    read_jsonl,
+)
+from repro.telemetry.metrics import (
+    AFL_REGISTRY,
+    HIST_KEYS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricRegistry,
+    afl_registry,
+    jit_record,
+    merge_fetched,
+    record_round,
+    to_jsonable,
+)
+from repro.telemetry.tracing import PhaseTracer, Span
+
+__all__ = [
+    "AFL_REGISTRY",
+    "HIST_KEYS",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "JsonlSink",
+    "MetricRegistry",
+    "PhaseTracer",
+    "Span",
+    "afl_registry",
+    "export_bench",
+    "jit_record",
+    "load_bench",
+    "merge_fetched",
+    "parse_csv_row",
+    "read_jsonl",
+    "record_round",
+    "to_jsonable",
+]

@@ -1,0 +1,342 @@
+"""Device-resident metrics: counters, gauges, and fixed-bin histograms.
+
+The accumulation state of a :class:`MetricRegistry` is a plain pytree of
+``jnp`` arrays, so it can be carried through ``lax.scan`` (the compiled
+experiment engine), threaded through the pjit distributed step, vmapped
+over seeds, and sharded over a mesh — with ZERO host round-trips mid-run.
+The state is fetched ONCE at run end (``fetch``) and merged across
+vmapped seeds / mesh shards (``merge`` / ``merge_stacked``).
+
+Bit-identity contract: histogram bin counts and the round/contact/success
+counters are sums of 0/1 weights, i.e. exact integers in float32 — their
+value is independent of the reduction order XLA picks, which is what lets
+the loop runner, the scan engine, and the (sharded) pjit step emit
+*bit-identical* histograms for the same seeded run
+(tests/test_telemetry.py).  Float-valued counters (``bits_total``,
+``energy_total``) are exact only up to reduction order.
+
+``HIST_KEYS`` — the per-eval-point history keys both execution engines
+emit — also lives here as the single source of truth (it used to be
+duplicated between ``core/runner.py`` and ``experiments/scan_engine.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Per-eval-point history keys emitted by BOTH execution engines
+# (core/runner.py loop and experiments/scan_engine.py).  Single source of
+# truth — the engines and the results store import it from here.
+HIST_KEYS = (
+    "round", "eval", "uploads", "k_mean", "energy", "theta_mean",
+    "power_mean", "bits_mean"
+)
+
+
+# ---------------------------------------------------------------------------
+# Metric specs (hashable: registries key jit caches)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Counter:
+    """Monotone accumulator (sums of per-round increments)."""
+
+    name: str
+    doc: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Gauge:
+    """Last-value-wins scalar (e.g. the current round index)."""
+
+    name: str
+    doc: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Histogram:
+    """Fixed-bin histogram.  ``edges`` are the ascending interior edges;
+    the state holds ``len(edges) + 1`` bins: an underflow bin
+    ``(-inf, e0)``, the half-open interior bins ``[e_i, e_{i+1})``, and an
+    overflow bin ``[e_last, inf)`` — so no sample is ever dropped."""
+
+    name: str
+    edges: Tuple[float, ...]
+    doc: str = ""
+
+    @property
+    def num_bins(self) -> int:
+        return len(self.edges) + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricRegistry:
+    """A fixed set of metrics plus the pure update/merge/fetch algebra.
+
+    Frozen and tuple-valued so instances are hashable — a registry is part
+    of the jit / ``lru_cache`` keys of the compiled engines (two runs with
+    different registries compile different programs; the same registry
+    object reuses one executable).
+    """
+
+    counters: Tuple[Counter, ...] = ()
+    gauges: Tuple[Gauge, ...] = ()
+    histograms: Tuple[Histogram, ...] = ()
+
+    # -- state ---------------------------------------------------------------
+
+    def init_state(self) -> dict:
+        """Zeroed accumulation pytree (device arrays once traced/put)."""
+        return {
+            "counters": {c.name: jnp.zeros((), jnp.float32)
+                         for c in self.counters},
+            "gauges": {g.name: jnp.zeros((), jnp.float32)
+                       for g in self.gauges},
+            "hist": {h.name: jnp.zeros((h.num_bins,), jnp.float32)
+                     for h in self.histograms},
+        }
+
+    def _hist(self, name: str) -> Histogram:
+        for h in self.histograms:
+            if h.name == name:
+                return h
+        raise KeyError(f"unknown histogram {name!r}; known: "
+                       f"{[h.name for h in self.histograms]}")
+
+    # -- update (jnp-traceable) ----------------------------------------------
+
+    def update(self, state: dict, counters: Optional[Mapping] = None,
+               gauges: Optional[Mapping] = None,
+               hists: Optional[Mapping] = None) -> dict:
+        """One accumulation step — pure, traceable, shape-preserving.
+
+        ``counters``: name -> scalar increment; ``gauges``: name -> new
+        value; ``hists``: name -> (values, weights) arrays of equal shape
+        (weights 0/1 masks keep the counts exactly integral).
+        """
+        new_c = dict(state["counters"])
+        for name, inc in (counters or {}).items():
+            new_c[name] = new_c[name] + jnp.asarray(inc, jnp.float32)
+        new_g = dict(state["gauges"])
+        for name, val in (gauges or {}).items():
+            new_g[name] = jnp.asarray(val, jnp.float32)
+        new_h = dict(state["hist"])
+        for name, (values, weights) in (hists or {}).items():
+            spec = self._hist(name)
+            edges = jnp.asarray(spec.edges, jnp.float32)
+            v = jnp.ravel(jnp.asarray(values)).astype(jnp.float32)
+            w = jnp.ravel(jnp.asarray(weights)).astype(jnp.float32)
+            idx = jnp.searchsorted(edges, v, side="right")
+            # one-hot contraction, not scatter-add: a (S, B) matmul has a
+            # fixed reduction order, and with 0/1 weights the bin counts
+            # are integers — exact under any order (the parity contract)
+            onehot = (idx[:, None] == jnp.arange(spec.num_bins)[None, :])
+            new_h[name] = new_h[name] + w @ onehot.astype(jnp.float32)
+        return {"counters": new_c, "gauges": new_g, "hist": new_h}
+
+    # -- merge ---------------------------------------------------------------
+
+    def merge(self, a: dict, b: dict) -> dict:
+        """Combine two accumulation states (counters/hists add, gauges
+        take the maximum — merge order must not matter)."""
+        return {
+            "counters": jax.tree.map(jnp.add, a["counters"], b["counters"]),
+            "gauges": jax.tree.map(jnp.maximum, a["gauges"], b["gauges"]),
+            "hist": jax.tree.map(jnp.add, a["hist"], b["hist"]),
+        }
+
+    def merge_stacked(self, state: dict, axis: int = 0) -> dict:
+        """Collapse a leading batch axis (vmapped seeds, mesh shards)."""
+        return {
+            "counters": jax.tree.map(lambda l: jnp.sum(l, axis=axis),
+                                     state["counters"]),
+            "gauges": jax.tree.map(lambda l: jnp.max(l, axis=axis),
+                                   state["gauges"]),
+            "hist": jax.tree.map(lambda l: jnp.sum(l, axis=axis),
+                                 state["hist"]),
+        }
+
+    # -- host side -----------------------------------------------------------
+
+    def fetch(self, state: dict) -> dict:
+        """Device state -> host snapshot (floats + np histogram arrays).
+        The ONE host round-trip of a run."""
+        return {
+            "counters": {k: float(v) for k, v in state["counters"].items()},
+            "gauges": {k: float(v) for k, v in state["gauges"].items()},
+            "hist": {k: np.asarray(v) for k, v in state["hist"].items()},
+        }
+
+    def hist_stats(self, name: str, counts) -> dict:
+        """Approximate count/mean/p50/p90 from binned counts (interior
+        bins use their midpoint; under/overflow clamp to the edge)."""
+        spec = self._hist(name)
+        c = np.asarray(counts, np.float64)
+        e = np.asarray(spec.edges, np.float64)
+        rep = np.concatenate([[e[0]], (e[:-1] + e[1:]) / 2.0, [e[-1]]])
+        total = float(c.sum())
+        if total <= 0:
+            return {"count": 0.0, "mean": float("nan"),
+                    "p50": float("nan"), "p90": float("nan")}
+        cdf = np.cumsum(c) / total
+        return {
+            "count": total,
+            "mean": float((c * rep).sum() / total),
+            "p50": float(rep[int(np.searchsorted(cdf, 0.5))]),
+            "p90": float(rep[int(np.searchsorted(cdf, 0.9))]),
+        }
+
+    def summary(self, snapshot: dict) -> str:
+        """Terminal summary table of a fetched snapshot."""
+        lines = [f"{'metric':<22s} {'value':>14s}"]
+        for c in self.counters:
+            lines.append(f"{c.name:<22s} {snapshot['counters'][c.name]:>14.6g}")
+        sc = snapshot["counters"]
+        if "successes" in sc and "contacts" in sc:
+            rate = sc["successes"] / max(sc["contacts"], 1.0)
+            lines.append(f"{'success_rate':<22s} {rate:>14.4f}")
+        for g in self.gauges:
+            lines.append(f"{g.name:<22s} {snapshot['gauges'][g.name]:>14.6g}")
+        lines.append(f"{'histogram':<22s} {'count':>10s} {'mean':>12s} "
+                     f"{'p50':>12s} {'p90':>12s}")
+        for h in self.histograms:
+            st = self.hist_stats(h.name, snapshot["hist"][h.name])
+            lines.append(f"{h.name:<22s} {st['count']:>10.0f} "
+                         f"{st['mean']:>12.4g} {st['p50']:>12.4g} "
+                         f"{st['p90']:>12.4g}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Host-side snapshot algebra (post-fetch / post-JSONL merging)
+# ---------------------------------------------------------------------------
+
+
+def merge_fetched(snapshots) -> dict:
+    """Merge fetched (or JSONL-loaded) snapshots: counters/hists add,
+    gauges max — the numpy mirror of ``MetricRegistry.merge``."""
+    snaps = list(snapshots)
+    if not snaps:
+        raise ValueError("no snapshots to merge")
+    out = {
+        "counters": {k: 0.0 for k in snaps[0]["counters"]},
+        "gauges": {k: -np.inf for k in snaps[0]["gauges"]},
+        "hist": {k: np.zeros_like(np.asarray(v, np.float64))
+                 for k, v in snaps[0]["hist"].items()},
+    }
+    for s in snaps:
+        for k, v in s["counters"].items():
+            out["counters"][k] += float(v)
+        for k, v in s["gauges"].items():
+            out["gauges"][k] = max(out["gauges"][k], float(v))
+        for k, v in s["hist"].items():
+            out["hist"][k] = out["hist"][k] + np.asarray(v, np.float64)
+    return out
+
+
+def to_jsonable(snapshot: dict) -> dict:
+    """Fetched snapshot -> plain lists/floats for the JSONL sink."""
+    return {
+        "counters": {k: float(v) for k, v in snapshot["counters"].items()},
+        "gauges": {k: float(v) for k, v in snapshot["gauges"].items()},
+        "hist": {k: [float(x) for x in np.asarray(v)]
+                 for k, v in snapshot["hist"].items()},
+    }
+
+
+# ---------------------------------------------------------------------------
+# The built-in AFL round registry
+# ---------------------------------------------------------------------------
+
+# fixed, model-independent edges: registries must hash equal across runs
+# so every engine/seed shares one compiled program
+_STALENESS_EDGES = (1., 2., 3., 4., 6., 8., 12., 16., 24., 32., 48., 64.,
+                    96., 128.)
+_TAU_EDGES = (0.5, 1., 2., 4., 8., 16., 32., 64., 128., 256.)
+_BITS_EDGES = tuple(float(2 ** e) for e in range(10, 31, 2))
+_K_EDGES = tuple(float(4 ** e) for e in range(0, 13))
+_B_EDGES = (1., 2., 3., 4., 5., 6., 8., 10., 12., 16., 20., 24., 32.)
+
+
+def afl_registry() -> MetricRegistry:
+    """The built-in registry for Algorithm-1 rounds: the staleness /
+    realized-bits / contact-duration / success / per-codec (k, b)
+    distributions the paper's convergence story runs on."""
+    return MetricRegistry(
+        counters=(
+            Counter("rounds", "rounds advanced"),
+            Counter("contacts", "feasible contact events (zeta & energy)"),
+            Counter("successes", "uploads that shipped >0 coordinates"),
+            Counter("bits_total", "realized payload bits (<= tau*A budget)"),
+            Counter("energy_total", "transmit energy spent (J)"),
+        ),
+        gauges=(
+            Gauge("round", "last round index recorded"),
+        ),
+        histograms=(
+            Histogram("staleness", _STALENESS_EDGES,
+                      "delta_tau = r - kappa_n at contact"),
+            Histogram("contact_tau", _TAU_EDGES,
+                      "contact duration tau_n (s) at contact"),
+            Histogram("bits", _BITS_EDGES,
+                      "realized bits per successful upload"),
+            Histogram("k", _K_EDGES,
+                      "coordinates kept per successful upload"),
+            Histogram("b", _B_EDGES,
+                      "value bit-width on the wire (u or the codec's b*)"),
+        ),
+    )
+
+
+#: Shared default instance — using the same object across engines keys one
+#: compile-cache entry (MetricRegistry is hashable by value, so equal
+#: registries hit the same cache either way).
+AFL_REGISTRY = afl_registry()
+
+
+def record_round(registry: MetricRegistry, state: dict, metrics: dict,
+                 tau) -> dict:
+    """Fold one AFL round's metric dict into the accumulation state.
+
+    Uses only the metric keys ALL three execution paths emit
+    (``afl_round``, the scan body, and the distributed step):
+    uploads/success/theta/bits/k/b/energy — so the same function is the
+    telemetry stage of every engine and their states stay bit-comparable.
+    ``tau`` is the round's (N,) contact-duration input.
+    """
+    okf = metrics["uploads"]
+    succ = metrics["success"]
+    return registry.update(
+        state,
+        counters={
+            "rounds": 1.0,
+            "contacts": jnp.sum(okf),
+            "successes": jnp.sum(succ),
+            "bits_total": jnp.sum(metrics["bits"]),
+            "energy_total": jnp.sum(metrics["energy"]),
+        },
+        gauges={"round": state["counters"]["rounds"] + 1.0},
+        hists={
+            "staleness": (metrics["theta"], okf),
+            "contact_tau": (tau, okf),
+            "bits": (metrics["bits"], succ),
+            "k": (metrics["k"], succ),
+            "b": (metrics["b"], succ),
+        },
+    )
+
+
+@lru_cache(maxsize=8)
+def jit_record(registry: MetricRegistry):
+    """Jitted ``record_round`` for the per-round loop engine (one compile
+    per registry; the scan/pjit engines trace ``record_round`` inline)."""
+    return jax.jit(
+        lambda state, metrics, tau: record_round(registry, state, metrics,
+                                                 tau)
+    )

@@ -1,0 +1,403 @@
+"""Telemetry subsystem: registry algebra, engine parity, exporters.
+
+The load-bearing contract is bit-identity: histogram bin counts are sums
+of 0/1 weights (exact integers in f32, reduction-order independent), so
+the loop runner, the scan engine, and the pjit distributed step must emit
+*bit-identical* histograms for the same seeded run — pinned here with
+``assert_array_equal``, not allclose.  The slow test re-checks the vmapped
+seed axis sharded over a mesh of 2 simulated host devices.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig, get_config
+from repro.core import baselines as BL
+from repro.core.distributed import DistConfig, init_state, make_afl_train_step, run_afl_rounds
+from repro.core.runner import build_provider, resolve_telemetry, run_afl, sample_budgets
+from repro.experiments import DataShard, run_afl_scanned, run_seed_batch
+from repro.launch.train import build_device_data
+from repro.models.registry import build_model
+from repro.telemetry import (
+    AFL_REGISTRY,
+    HIST_KEYS,
+    Counter,
+    Gauge,
+    Histogram,
+    JsonlSink,
+    MetricRegistry,
+    PhaseTracer,
+    export_bench,
+    load_bench,
+    merge_fetched,
+    parse_csv_row,
+    read_jsonl,
+    to_jsonable,
+)
+
+ROUNDS, EVERY = 8, 4
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def federation():
+    cfg = get_config("resnet9-cifar10").replace(d_model=4)
+    model = build_model(cfg)
+    fl = FLConfig(
+        num_devices=4, rounds=ROUNDS, batch_size=8, learning_rate=0.02,
+        mean_contact=6.0, mean_intercontact=30.0, energy_budget=(40.0, 80.0),
+    )
+    dev, ev = build_device_data(cfg, fl, train_n=160, eval_n=64, seed=0)
+    shard = DataShard(dev, fl.batch_size, seed=0)
+    return cfg, model, fl, shard, ev
+
+
+def _assert_snapshots_equal(a: dict, b: dict, err=""):
+    """Hists + integral counters exactly equal; float totals to 1e-6."""
+    for k in a["hist"]:
+        np.testing.assert_array_equal(a["hist"][k], b["hist"][k],
+                                      err_msg=f"{err} hist {k!r}")
+    for k in ("rounds", "contacts", "successes"):
+        assert a["counters"][k] == b["counters"][k], (err, k)
+    for k in ("bits_total", "energy_total"):
+        np.testing.assert_allclose(a["counters"][k], b["counters"][k],
+                                   rtol=1e-6, err_msg=f"{err} {k}")
+    assert a["gauges"] == b["gauges"], err
+
+
+# ---------------------------------------------------------------------------
+# registry algebra (host-only, fast)
+# ---------------------------------------------------------------------------
+
+
+def test_hist_keys_single_source():
+    """core.runner re-exports the telemetry module's HIST_KEYS object."""
+    from repro.core.runner import HIST_KEYS as runner_keys
+    from repro.experiments.scan_engine import HIST_KEYS as scan_keys
+
+    assert runner_keys is HIST_KEYS
+    assert scan_keys is HIST_KEYS
+
+
+def test_engines_emit_same_history_keys(federation):
+    cfg, model, fl, shard, ev = federation
+    loop = run_afl(model, cfg, fl, "mads", shard, ev, rounds=2, eval_every=2)
+    scan = run_afl_scanned(model, cfg, fl, "mads", shard, ev, rounds=2,
+                           eval_every=2)
+    assert set(loop.history) == set(HIST_KEYS)
+    assert set(scan.history) == set(HIST_KEYS)
+
+
+def test_histogram_bins_underflow_interior_overflow():
+    reg = MetricRegistry(
+        counters=(Counter("n"),), gauges=(Gauge("r"),),
+        histograms=(Histogram("h", edges=(1.0, 2.0, 4.0)),),
+    )
+    s = reg.init_state()
+    # 0.5 -> underflow; 1.0, 1.5 -> [1,2); 3.0 -> [2,4); 4.0, 9.0 -> overflow
+    vals = jnp.asarray([0.5, 1.0, 1.5, 3.0, 4.0, 9.0])
+    s = reg.update(s, counters={"n": 6.0}, gauges={"r": 1.0},
+                   hists={"h": (vals, jnp.ones_like(vals))})
+    np.testing.assert_array_equal(np.asarray(s["hist"]["h"]),
+                                  [1.0, 2.0, 1.0, 2.0])
+    assert float(s["counters"]["n"]) == 6.0
+    assert float(s["gauges"]["r"]) == 1.0
+    # masked weights drop samples without perturbing the others
+    s = reg.update(s, hists={"h": (vals, jnp.asarray([0., 1., 0., 1., 0., 1.]))})
+    np.testing.assert_array_equal(np.asarray(s["hist"]["h"]),
+                                  [1.0, 3.0, 2.0, 3.0])
+    with pytest.raises(KeyError):
+        reg.update(s, hists={"nope": (vals, vals)})
+
+
+def test_merge_associative_and_stacked():
+    reg = AFL_REGISTRY
+    rng = np.random.default_rng(0)
+    states = []
+    for i in range(3):
+        s = reg.init_state()
+        m = {
+            "uploads": jnp.asarray(rng.integers(0, 2, 4), jnp.float32),
+            "success": jnp.asarray(rng.integers(0, 2, 4), jnp.float32),
+            "theta": jnp.asarray(rng.uniform(1, 100, 4), jnp.float32),
+            "bits": jnp.asarray(rng.uniform(1e3, 1e8, 4), jnp.float32),
+            "k": jnp.asarray(rng.uniform(1, 1e6, 4), jnp.float32),
+            "b": jnp.asarray(rng.uniform(1, 32, 4), jnp.float32),
+            "energy": jnp.asarray(rng.uniform(0, 1, 4), jnp.float32),
+        }
+        from repro.telemetry import record_round
+
+        states.append(record_round(reg, s, m, jnp.asarray([1., 3., 9., 80.])))
+    a, b, c = states
+    left = reg.fetch(reg.merge(reg.merge(a, b), c))
+    right = reg.fetch(reg.merge(a, reg.merge(b, c)))
+    _assert_snapshots_equal(left, right, "associativity")
+    # merge_stacked == the pairwise fold
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), a, b, c)
+    _assert_snapshots_equal(reg.fetch(reg.merge_stacked(stacked)), left,
+                            "stacked")
+    # numpy mirror of merge agrees with the device merge
+    _assert_snapshots_equal(
+        merge_fetched([reg.fetch(a), reg.fetch(b), reg.fetch(c)]), left,
+        "merge_fetched")
+
+
+# ---------------------------------------------------------------------------
+# engine parity: loop vs scan vs pjit step, bit-identical histograms
+# ---------------------------------------------------------------------------
+
+
+def test_loop_scan_parity_bit_identical(federation):
+    """Same seeded mads run through both engines: identical snapshots."""
+    cfg, model, fl, shard, ev = federation
+    loop = run_afl(model, cfg, fl, "mads", shard, ev, rounds=ROUNDS,
+                   eval_every=EVERY, seed=3, telemetry=AFL_REGISTRY)
+    scan = run_afl_scanned(model, cfg, fl, "mads", shard, ev, rounds=ROUNDS,
+                           eval_every=EVERY, seed=3, telemetry=AFL_REGISTRY)
+    assert loop.telemetry is not None and scan.telemetry is not None
+    _assert_snapshots_equal(loop.telemetry, scan.telemetry, "loop-vs-scan")
+    assert loop.telemetry["counters"]["rounds"] == ROUNDS
+    # something was actually observed
+    assert loop.telemetry["counters"]["contacts"] > 0
+    assert sum(loop.telemetry["hist"]["staleness"]) == \
+        loop.telemetry["counters"]["contacts"]
+
+
+def test_dist_step_telemetry_matches_loop(federation):
+    """The pjit step's in-program record_round equals the loop engine's."""
+    cfg, model, fl, shard, ev = federation
+    policy = BL.ALL["mads"](model.num_params(), fl)
+    dcfg = DistConfig(
+        num_clients=fl.num_devices, learning_rate=fl.learning_rate,
+        rounds=fl.rounds, state_dtype="float32", upload_dtype="float32",
+    )
+    step = jax.jit(make_afl_train_step(model, cfg, dcfg, policy.controller,
+                                       telemetry=AFL_REGISTRY))
+    provider = build_provider(fl, "mads", None, ROUNDS, 0)
+    budgets = sample_budgets(fl, 0)
+    key = shard.seed_key(0)
+    flat = lambda b: jax.tree.map(
+        lambda v: v.reshape((-1,) + v.shape[2:]), b)
+    _, hist, tstate = run_afl_rounds(
+        step, init_state(model, dcfg, jax.random.key(0)), provider,
+        lambda r: flat(shard.traced_batch(key, r)), budgets,
+        rounds=ROUNDS, telemetry=AFL_REGISTRY,
+    )
+    assert len(hist) == ROUNDS
+    loop = run_afl(model, cfg, fl, "mads", shard, ev, rounds=ROUNDS,
+                   eval_every=EVERY, seed=0, telemetry=AFL_REGISTRY)
+    _assert_snapshots_equal(AFL_REGISTRY.fetch(tstate), loop.telemetry,
+                            "dist-vs-loop")
+
+
+def test_seed_vmap_telemetry_matches_independent(federation):
+    """Vmapped seeds carry per-seed states; each slice equals the
+    independent scanned run, and merging recovers the totals."""
+    cfg, model, fl, shard, ev = federation
+    batch = run_seed_batch(model, cfg, fl, "mads", shard, ev, seeds=[0, 1],
+                           rounds=ROUNDS, eval_every=EVERY,
+                           telemetry=AFL_REGISTRY)
+    snaps = [r.telemetry for r in batch]
+    assert all(s is not None for s in snaps)
+    for seed, snap in zip((0, 1), snaps):
+        ind = run_afl_scanned(model, cfg, fl, "mads", shard, ev,
+                              rounds=ROUNDS, eval_every=EVERY, seed=seed,
+                              telemetry=AFL_REGISTRY)
+        _assert_snapshots_equal(snap, ind.telemetry, f"vmap seed {seed}")
+    merged = merge_fetched(snaps)
+    assert merged["counters"]["rounds"] == 2 * ROUNDS
+    np.testing.assert_array_equal(
+        merged["hist"]["staleness"],
+        np.asarray(snaps[0]["hist"]["staleness"], np.float64)
+        + np.asarray(snaps[1]["hist"]["staleness"], np.float64))
+
+
+def test_fl_config_knob_and_resolution(federation):
+    """fl.telemetry=True turns on the built-in registry; off -> None."""
+    import dataclasses
+
+    cfg, model, fl, shard, ev = federation
+    assert resolve_telemetry(fl, None) is None
+    assert resolve_telemetry(fl, AFL_REGISTRY) is AFL_REGISTRY
+    fl_on = dataclasses.replace(fl, telemetry=True)
+    assert resolve_telemetry(fl_on, None) is AFL_REGISTRY
+    res = run_afl_scanned(model, cfg, fl_on, "mads", shard, ev,
+                          rounds=ROUNDS, eval_every=EVERY, seed=3)
+    assert res.telemetry is not None
+    off = run_afl_scanned(model, cfg, fl, "mads", shard, ev, rounds=2,
+                          eval_every=2)
+    assert off.telemetry is None
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_spans_and_fence():
+    tracer = PhaseTracer()
+    with tracer.span("compile"):
+        pass
+    for _ in range(3):
+        with tracer.span("execute", r=1):
+            tracer.fence(jnp.ones(4) * 2)
+            tracer.fence({"host": [1, 2]})  # non-array pytree: no-op
+    tot = tracer.totals()
+    assert tot["compile"]["count"] == 1
+    assert tot["execute"]["count"] == 3
+    assert tot["execute"]["total_s"] >= tot["execute"]["max_s"] > 0
+    assert "execute" in tracer.summary()
+    events = tracer.events()
+    assert len(events) == 4 and all(e["kind"] == "span" for e in events)
+    json.dumps(events)  # sink-ready
+    # without profile_dir, start/stop are no-ops
+    tracer.start()
+    tracer.stop()
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+
+def test_jsonl_sink_roundtrip_and_aggregate(tmp_path):
+    """write -> read -> aggregate: the sweep telemetry file contract."""
+    reg = AFL_REGISTRY
+    s = reg.init_state()
+    from repro.telemetry import record_round
+
+    m = {"uploads": jnp.asarray([1., 1., 0., 0.]),
+         "success": jnp.asarray([1., 0., 0., 0.]),
+         "theta": jnp.asarray([2., 5., 1., 1.]),
+         "bits": jnp.asarray([1e5, 0., 0., 0.]),
+         "k": jnp.asarray([100., 0., 0., 0.]),
+         "b": jnp.asarray([8., 0., 0., 0.]),
+         "energy": jnp.asarray([0.5, 0.2, 0., 0.])}
+    s = record_round(reg, s, m, jnp.asarray([3., 7., 0., 0.]))
+    snap = reg.fetch(s)
+
+    path = tmp_path / "telemetry.jsonl"
+    with JsonlSink(str(path)) as sink:
+        sink.emit({"kind": "metrics", "group": "a", **to_jsonable(snap)})
+        sink.emit({"kind": "metrics", "group": "b", **to_jsonable(snap)})
+        sink.emit({"kind": "span", "name": "run", "duration_s": 1.0})
+        with pytest.raises(TypeError):
+            sink.emit({"bad": object()})  # eager validation
+    loaded = read_jsonl(str(path))
+    assert len(loaded) == 3
+    metrics = [r for r in loaded if r["kind"] == "metrics"]
+    agg = merge_fetched(metrics)
+    assert agg["counters"]["rounds"] == 2.0
+    assert agg["counters"]["contacts"] == 4.0
+    np.testing.assert_array_equal(
+        np.asarray(agg["hist"]["staleness"]),
+        2.0 * np.asarray(snap["hist"]["staleness"], np.float64))
+    # summary renders from a merged JSONL snapshot too
+    assert "success_rate" in reg.summary(agg)
+
+
+def test_bench_export_trajectory_and_compare(tmp_path):
+    rows = ["afl_scan_n8,6235.5,rounds_per_s=160.4;speedup_vs_loop=2.4x",
+            "afl_loop_n8,15111.4,rounds_per_s=66.2"]
+    rec = parse_csv_row(rows[0])
+    assert rec["name"] == "afl_scan_n8"
+    assert rec["metrics"] == {"rounds_per_s": 160.4, "speedup_vs_loop": 2.4}
+
+    out = tmp_path / "bench"
+    p = export_bench("afl", rows, out_dir=str(out), meta={"smoke": True})
+    assert os.path.basename(p) == "BENCH_afl.json"
+    data = load_bench(p)
+    assert data["suite"] == "afl" and data["history"] == []
+    assert data["rows"][1]["metrics"]["rounds_per_s"] == 66.2
+    # re-export pushes the previous rows onto the trajectory
+    export_bench("afl", rows, out_dir=str(out))
+    assert len(load_bench(p)["history"]) == 1
+
+    # regression checker: ok at parity, exit 1 on a >30% throughput drop
+    base = tmp_path / "base"
+    export_bench("afl", rows, out_dir=str(base))
+    script = os.path.join(os.path.dirname(__file__), "..", "tools",
+                          "bench_compare.py")
+    ok = subprocess.run(
+        [sys.executable, script, str(base / "BENCH_afl.json"), p, "--check"],
+        capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    slow = ["afl_scan_n8,6235.5,rounds_per_s=100.0;speedup_vs_loop=1.5x",
+            "afl_loop_n8,15111.4,rounds_per_s=66.2"]
+    export_bench("afl", slow, out_dir=str(out))
+    bad = subprocess.run(
+        [sys.executable, script, str(base / "BENCH_afl.json"), p, "--check"],
+        capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "REGRESSED" in bad.stdout
+    # missing baseline: fresh branches pass
+    none = subprocess.run(
+        [sys.executable, script, str(base / "nope.json"), p, "--check"],
+        capture_output=True, text=True)
+    assert none.returncode == 0
+
+
+# ---------------------------------------------------------------------------
+# 2 simulated host devices: sharded seed axis, same histograms
+# ---------------------------------------------------------------------------
+
+
+MESH_SCRIPT = r"""
+import jax
+from repro.launch.mesh import force_host_device_count
+force_host_device_count(2)
+import numpy as np
+
+from repro.configs import FLConfig, get_config
+from repro.experiments import DataShard, run_seed_batch
+from repro.launch.mesh import make_seed_mesh
+from repro.launch.train import build_device_data
+from repro.models.registry import build_model
+from repro.telemetry import AFL_REGISTRY, merge_fetched
+
+assert jax.device_count() == 2, jax.devices()
+
+cfg = get_config("resnet9-cifar10").replace(d_model=4)
+model = build_model(cfg)
+fl = FLConfig(num_devices=4, rounds=6, batch_size=8, learning_rate=0.02,
+              mean_contact=6.0, mean_intercontact=30.0,
+              energy_budget=(40.0, 80.0))
+dev, ev = build_device_data(cfg, fl, train_n=160, eval_n=64, seed=0)
+shard = DataShard(dev, fl.batch_size, seed=0)
+
+mesh = make_seed_mesh(2)
+assert mesh is not None
+sharded = run_seed_batch(model, cfg, fl, "mads", shard, ev, seeds=[0, 1],
+                         rounds=6, eval_every=3, mesh=mesh,
+                         telemetry=AFL_REGISTRY)
+single = run_seed_batch(model, cfg, fl, "mads", shard, ev, seeds=[0, 1],
+                        rounds=6, eval_every=3, mesh=None,
+                        telemetry=AFL_REGISTRY)
+for i in range(2):
+    a, b = sharded[i].telemetry, single[i].telemetry
+    for k in a["hist"]:
+        assert np.array_equal(a["hist"][k], b["hist"][k]), (i, k)
+    for k in ("rounds", "contacts", "successes"):
+        assert a["counters"][k] == b["counters"][k], (i, k)
+m = merge_fetched([r.telemetry for r in sharded])
+assert m["counters"]["rounds"] == 12
+print("MESH_TELEMETRY_OK")
+"""
+
+
+@pytest.mark.slow
+def test_two_device_mesh_histograms_bit_identical():
+    """Seed axis sharded over 2 simulated host devices: per-seed telemetry
+    histograms equal the unsharded run's exactly (integer-count contract)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", MESH_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "MESH_TELEMETRY_OK" in out.stdout

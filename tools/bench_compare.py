@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_<suite>.json exports and flag throughput regressions.
+
+    python tools/bench_compare.py baseline/BENCH_afl.json current/BENCH_afl.json
+    python tools/bench_compare.py baseline/BENCH_afl.json current/BENCH_afl.json \
+        --check --threshold 0.30
+
+Rows are matched by ``name``.  Higher-is-better metrics (``rounds_per_s``,
+``tok_per_s``, anything ``*_per_s``) regress when current < baseline by
+more than the threshold fraction; ``us_per_call`` (lower is better)
+regresses when current > baseline by more than the threshold.  ``--check``
+exits 1 on any regression (the CI gate); a missing baseline file exits 0
+so fresh branches pass until a baseline lands.
+
+Stdlib-only on purpose: runs in CI images without the repo's deps.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+HIGHER_BETTER_SUFFIX = "_per_s"
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: r for r in data.get("rows", [])}
+
+
+def compare(base: dict, cur: dict, threshold: float) -> list[dict]:
+    """Per-matched-row deltas; ``regressed`` marks threshold violations."""
+    out = []
+    for name, b in sorted(base.items()):
+        c = cur.get(name)
+        if c is None:
+            continue
+        checks = []
+        b_us, c_us = b.get("us_per_call", 0.0), c.get("us_per_call", 0.0)
+        if b_us > 0 and c_us > 0:
+            checks.append(("us_per_call", b_us, c_us,
+                           (c_us - b_us) / b_us))  # + = slower
+        for key, bv in b.get("metrics", {}).items():
+            cv = c.get("metrics", {}).get(key)
+            if cv is None or not key.endswith(HIGHER_BETTER_SUFFIX) or bv <= 0:
+                continue
+            checks.append((key, bv, cv, (bv - cv) / bv))  # + = slower
+        for key, bv, cv, slowdown in checks:
+            out.append({
+                "name": name, "metric": key, "baseline": bv, "current": cv,
+                "slowdown": slowdown, "regressed": slowdown > threshold,
+            })
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="BENCH_<suite>.json to compare against")
+    ap.add_argument("current", help="freshly exported BENCH_<suite>.json")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="fractional slowdown that counts as a regression")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on any regression (CI gate)")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(f"bench_compare: no baseline at {args.baseline}; skipping")
+        return 0
+    if not os.path.exists(args.current):
+        print(f"bench_compare: missing current file {args.current}")
+        return 1
+
+    deltas = compare(load_rows(args.baseline), load_rows(args.current),
+                     args.threshold)
+    if not deltas:
+        print("bench_compare: no matching rows")
+        return 0
+
+    width = max(len(d["name"]) for d in deltas)
+    regressed = [d for d in deltas if d["regressed"]]
+    for d in deltas:
+        mark = "REGRESSED" if d["regressed"] else "ok"
+        print(f"{d['name']:<{width}s} {d['metric']:>14s} "
+              f"base={d['baseline']:<12.4g} cur={d['current']:<12.4g} "
+              f"slowdown={d['slowdown']:+7.1%} {mark}")
+    print(f"bench_compare: {len(regressed)}/{len(deltas)} checks regressed "
+          f"(threshold {args.threshold:.0%})")
+    return 1 if (args.check and regressed) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
