@@ -199,6 +199,11 @@ class FLConfig:
     # runners; consumed host-side when resolving the registry, the compiled
     # round never reads it
     telemetry: bool = False
+    # per-device flight recorder / online theory probes: either knob makes
+    # the runners carry a TelemetrySuite (global registry + the requested
+    # extras) instead of the bare registry — also host-side only
+    telemetry_perdevice: bool = False
+    telemetry_probes: bool = False
     # non-iid
     dirichlet_rho: float = 0.5
     seed: int = 0

@@ -206,6 +206,12 @@ def afl_round(state: AflState, batch, zeta, tau, h2, energy_budget,
     kappa_new = jnp.where(ok, r, state.kappa)
     q_new = ctl.queue_update(state.q, energy, energy_budget, fl.rounds)
 
+    # per-device EF-memory squared norm (Lemma 4's E||e_n||^2, observable):
+    # same leaf-order reduction as x_norm2 so engines agree bit-for-bit
+    e_norm2 = sum(
+        jnp.sum(jnp.square(l.astype(jnp.float32)), axis=tuple(range(1, l.ndim)))
+        for l in jax.tree.leaves(e_n_new)
+    )
     metrics = {
         "k": k_actual * okf,
         "k_target": k,
@@ -215,6 +221,7 @@ def afl_round(state: AflState, batch, zeta, tau, h2, energy_budget,
         "theta": theta,
         "uploads": okf,
         "x_norm2": x_norm2,
+        "e_norm2": e_norm2,
         "queue": q_new,
         "bits": bits,  # realised upload payload (<= tau*A budget; eq. 7c)
         "b": b_used,  # value bit-width on the wire (u, or the codec's b*)

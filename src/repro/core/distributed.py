@@ -268,6 +268,13 @@ def make_afl_train_step(model, cfg, dcfg: DistConfig, controller: MadsController
         kappa_new = jnp.where(ok, r, state.kappa)
         q_new = controller.queue_update(state.q, energy, budgets, dcfg.rounds)
 
+        # same leaf-order reduction as the single-host afl_round so the
+        # per-device table / probe accumulators stay engine-comparable
+        e_norm2 = sum(
+            jnp.sum(jnp.square(l.astype(jnp.float32)),
+                    axis=tuple(range(1, l.ndim)))
+            for l in jax.tree.leaves(e_n_new)
+        )
         metrics = {
             "k": k_actual * okf,
             "success": (k_actual > 0).astype(jnp.float32) * okf,
@@ -275,6 +282,8 @@ def make_afl_train_step(model, cfg, dcfg: DistConfig, controller: MadsController
             "energy": energy,
             "theta": theta,
             "uploads": okf,
+            "x_norm2": x_norm2,
+            "e_norm2": e_norm2,
             "bits": bits,  # realised payload (<= tau*A budget; eq. 7c)
             "b": b_used,  # value bit-width on the wire (u, or the codec's b*)
             "upload_bits": bits,  # legacy alias (pre-codec dashboards)
@@ -330,6 +339,32 @@ def run_afl_rounds(step, state, provider, batch_fn, budgets,
     return state, history
 
 
+def telemetry_shardings(telemetry, mesh: Mesh):
+    """Sharding pytree for a telemetry accumulation state on ``mesh``.
+
+    Registry counters/histograms and probe scalars replicate (their
+    updates are full reductions over the client axis, committed
+    identically on every shard — integer-exact for the counts).  A
+    ``TelemetrySuite``'s per-device table instead takes the mesh's
+    ``data`` axis on its (N,) rows: every table update is elementwise per
+    client, so each shard accumulates ONLY its own clients' rows and
+    GSPMD inserts no mid-run collectives — the rows merge once, at fetch.
+    """
+    rep = NamedSharding(mesh, P())
+    if telemetry is None:
+        return rep
+    from repro.telemetry import TelemetrySuite
+
+    state = jax.eval_shape(telemetry.init_state)
+    if isinstance(telemetry, TelemetrySuite) and telemetry.device is not None:
+        cl = NamedSharding(mesh, P("data"))
+        out = {k: jax.tree.map(lambda _: rep, v) for k, v in state.items()}
+        out["device"] = {f: (cl if s.ndim else rep)
+                         for f, s in state["device"].items()}
+        return out
+    return jax.tree.map(lambda _: rep, state)
+
+
 def make_afl_train_system(model, cfg, mesh: Mesh, dcfg: DistConfig | None = None,
                           rules=None, controller: MadsController | None = None,
                           compressor: Compressor | None = None,
@@ -349,9 +384,10 @@ def make_afl_train_system(model, cfg, mesh: Mesh, dcfg: DistConfig | None = None
         "telemetry": telemetry,
         "state_shardings": st_sh,
         "scalar_sharding": rep,
-        # telemetry state replicates (histogram counts are integer-exact,
-        # so the client-axis reduce commits the same value on every shard)
-        "telemetry_sharding": rep,
+        # registry state replicates (integer-exact histogram counts commit
+        # the same value on every shard); a suite's per-device rows shard
+        # over the client mesh — see telemetry_shardings
+        "telemetry_sharding": telemetry_shardings(telemetry, mesh),
         "abstract_state": lambda: abstract_state(model, dcfg),
         "init_state": lambda rng: init_state(model, dcfg, rng),
     }

@@ -41,14 +41,37 @@ class RunResult:
     history: dict  # lists per metric
     final_eval: float
     state: object
-    telemetry: Optional[dict] = None  # fetched MetricRegistry snapshot
+    # fetched MetricRegistry snapshot, or a TelemetrySuite's sectioned
+    # {"metrics"/"device"/"probes"} snapshot when the suite knobs are on
+    telemetry: Optional[dict] = None
 
 
-def resolve_telemetry(fl, telemetry):
-    """The run's MetricRegistry: an explicit registry wins; otherwise the
-    FLConfig ``telemetry`` knob turns on the built-in AFL registry."""
+def resolve_telemetry(fl, telemetry, s: int = 0):
+    """The run's telemetry: an explicit registry/suite wins; otherwise the
+    FLConfig knobs decide — ``telemetry`` alone turns on the built-in AFL
+    registry, and ``telemetry_perdevice`` / ``telemetry_probes`` upgrade
+    it to a ``TelemetrySuite`` carrying the per-device flight recorder
+    and/or the theory probes alongside the registry.
+
+    ``s`` is the model size the engines pass (``model.num_params()``) —
+    the probes compare measured error/staleness/success against the
+    closed forms at that (s, u) operating point.  Resolution runs on the
+    FULL FLConfig, before ``experiments.grid.engine_fl`` projects it for
+    the jit caches, so the knobs never trigger recompiles.
+    """
     if telemetry is not None:
         return telemetry
+    want_dev = getattr(fl, "telemetry_perdevice", False)
+    want_probes = getattr(fl, "telemetry_probes", False) and s > 0
+    if want_dev or want_probes:
+        from repro.telemetry import DeviceTable, TelemetrySuite, TheoryProbes
+
+        return TelemetrySuite(
+            metrics=AFL_REGISTRY,
+            device=DeviceTable(fl.num_devices) if want_dev else None,
+            probes=(TheoryProbes(s=s, u=fl.value_bits)
+                    if want_probes else None),
+        )
     return AFL_REGISTRY if getattr(fl, "telemetry", False) else None
 
 
@@ -138,7 +161,7 @@ def run_afl(
 ) -> RunResult:
     rounds = rounds or fl.rounds
     seed = fl.seed if seed is None else seed
-    telemetry = resolve_telemetry(fl, telemetry)
+    telemetry = resolve_telemetry(fl, telemetry, s=model.num_params())
 
     if engine == "scan":
         from repro.experiments.scan_engine import run_afl_scanned

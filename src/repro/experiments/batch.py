@@ -102,7 +102,7 @@ def run_seed_batch(
     rounds = rounds or fl.rounds
     from repro.core.runner import resolve_telemetry
 
-    telemetry = resolve_telemetry(fl, telemetry)
+    telemetry = resolve_telemetry(fl, telemetry, s=model.num_params())
     policy = BL.ALL[policy_name](model.num_params(), fl)
     epolicy = engine_policy(policy)
 

@@ -241,7 +241,7 @@ def run_afl_scanned(
     """
     rounds = rounds or fl.rounds
     seed = fl.seed if seed is None else seed
-    telemetry = resolve_telemetry(fl, telemetry)
+    telemetry = resolve_telemetry(fl, telemetry, s=model.num_params())
     policy = BL.ALL[policy_name](model.num_params(), fl)
 
     provider = build_provider(fl, policy_name, schedule, rounds, seed)

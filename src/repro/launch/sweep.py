@@ -46,9 +46,14 @@ from repro.launch.train import build_device_data
 from repro.models.registry import build_model
 from repro.telemetry import (
     AFL_REGISTRY,
+    DeviceTable,
     JsonlSink,
     PhaseTracer,
+    TelemetrySuite,
+    TheoryProbes,
     merge_fetched,
+    render_report,
+    report_from_config,
     to_jsonable,
 )
 from repro.utils import get_logger
@@ -62,13 +67,18 @@ def run_sweep(grid: ExperimentGrid, store: ResultsStore, model, cfg, shard,
     """Execute every pending cell of ``grid`` into ``store``; returns the
     comparison table.
 
-    ``telemetry`` (a ``repro.telemetry.MetricRegistry``) instruments every
-    group's vmapped run; per-group merged snapshots land in ``sink`` (a
-    ``JsonlSink``) as ``group_metrics`` events plus one sweep-wide
-    ``metrics`` event.  ``tracer`` records one span per executed group.
+    ``telemetry`` (a ``repro.telemetry.MetricRegistry`` or
+    ``TelemetrySuite``) instruments every group's vmapped run; per-group
+    merged snapshots land in ``sink`` (a ``JsonlSink``) as
+    ``group_metrics`` events plus one sweep-wide ``metrics`` event.  A
+    suite with probes additionally emits one ``probe_report`` event per
+    group — the theory closed forms evaluated at that group's (c, lam,
+    delta) contact point.  ``tracer`` records one span per executed group.
     """
     span = tracer.span if tracer is not None else (
         lambda name, **kw: nullcontext())
+    probes = telemetry.probes if isinstance(telemetry, TelemetrySuite) \
+        else None
     snapshots = []
     for policy, mobility, speed, cells in grid.groups():
         todo = store.pending(cells)
@@ -97,6 +107,10 @@ def run_sweep(grid: ExperimentGrid, store: ResultsStore, model, cfg, shard,
                 sink.emit({"kind": "group_metrics",
                            "group": cells[0].group_key,
                            "seeds": len(todo), **to_jsonable(gsnap)})
+                if probes is not None and gsnap.get("probes") is not None:
+                    rep = report_from_config(probes, gsnap["probes"], fl)
+                    sink.emit({"kind": "probe_report",
+                               "group": cells[0].group_key, **rep})
         log.info("group %s: %d seeds in %.1fs (%.1f rounds/s)",
                  cells[0].group_key, len(todo), wall,
                  grid.rounds * len(todo) / max(wall, 1e-9))
@@ -163,6 +177,20 @@ def main() -> None:
                     help="disable the device-resident metric registry "
                          "(on by default; snapshots land in "
                          "--out/telemetry.jsonl)")
+    ap.add_argument("--perdevice", action="store_true",
+                    help="carry the per-device flight recorder "
+                         "(repro/telemetry/perdevice.py): (N,) rows of "
+                         "participation/staleness/tau/bits/energy, "
+                         "straggler table at fetch")
+    ap.add_argument("--probes", action="store_true",
+                    help="carry the online theory probes "
+                         "(repro/telemetry/probes.py): one probe_report "
+                         "event per group comparing measured "
+                         "error/staleness/success against core/theory.py")
+    ap.add_argument("--report", action="store_true",
+                    help="render --out/report.md from the telemetry "
+                         "events after the sweep (same renderer as "
+                         "tools/report.py)")
     ap.add_argument("--profile-dir", default="",
                     help="jax.profiler trace dir for the sweep")
     ap.add_argument("--out", default="runs/sweep")
@@ -213,6 +241,13 @@ def main() -> None:
     mesh = make_seed_mesh(args.seeds)
 
     telemetry = None if args.no_telemetry else AFL_REGISTRY
+    if telemetry is not None and (args.perdevice or args.probes):
+        telemetry = TelemetrySuite(
+            metrics=AFL_REGISTRY,
+            device=DeviceTable(args.devices) if args.perdevice else None,
+            probes=(TheoryProbes(s=model.num_params(), u=base.value_bits)
+                    if args.probes else None),
+        )
     tracer = PhaseTracer(profile_dir=args.profile_dir or None)
     tracer.start()
     sink = JsonlSink(os.path.join(args.out, "telemetry.jsonl"))
@@ -225,6 +260,12 @@ def main() -> None:
     finally:
         tracer.stop()
     print(table)
+    if args.report:
+        report_path = os.path.join(args.out, "report.md")
+        with open(report_path, "w") as f:
+            f.write(render_report(
+                sink.events, title=f"Sweep report — {cfg.name}"))
+        log.info("run report: %s", report_path)
     log.info("group wall clock:\n%s", tracer.summary())
     log.info("results under %s (cells/*.npz + results.jsonl + "
              "telemetry.jsonl)", args.out)

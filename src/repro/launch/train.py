@@ -24,7 +24,7 @@ import numpy as np
 from repro.checkpoint import save
 from repro.configs import FLConfig, get_config
 from repro.core import baselines as BL
-from repro.core.runner import run_afl
+from repro.core.runner import resolve_telemetry, run_afl
 from repro.data import (
     DeviceLoader,
     SyntheticCifar,
@@ -33,7 +33,13 @@ from repro.data import (
     dirichlet_partition,
 )
 from repro.models.registry import build_model
-from repro.telemetry import AFL_REGISTRY, JsonlSink, PhaseTracer, to_jsonable
+from repro.telemetry import (
+    JsonlSink,
+    PhaseTracer,
+    TelemetrySuite,
+    report_from_config,
+    to_jsonable,
+)
 from repro.utils import get_logger
 
 log = get_logger("repro.train")
@@ -97,6 +103,9 @@ def main() -> None:
     ap.add_argument("--intercontact", type=float, default=400.0)
     ap.add_argument("--v-weight", type=float, default=1e-4)
     ap.add_argument("--reduced", action="store_true", help="use the reduced variant")
+    ap.add_argument("--width", type=int, default=0,
+                    help=">0: override d_model (CPU-sized smoke runs, "
+                         "same knob as sweep.py)")
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--train-n", type=int, default=2000)
     ap.add_argument("--eval-every", type=int, default=20)
@@ -107,6 +116,15 @@ def main() -> None:
                     help="device-resident round metrics (repro/telemetry): "
                          "staleness/bits/tau histograms + counters, written "
                          "to workdir/telemetry.jsonl")
+    ap.add_argument("--perdevice", action="store_true",
+                    help="also carry the per-device flight recorder (implies "
+                         "--telemetry): (N,) participation/staleness/tau/"
+                         "bits/energy rows, straggler table at the end")
+    ap.add_argument("--probes", action="store_true",
+                    help="also carry the online theory probes (implies "
+                         "--telemetry): theory-vs-measured deltas against "
+                         "core/theory.py closed forms, emitted as a "
+                         "probe_report event")
     ap.add_argument("--profile-dir", default="",
                     help="jax.profiler trace dir; also annotates the "
                          "compile/execute/eval phase spans")
@@ -117,6 +135,8 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.width > 0:
+        cfg = cfg.replace(d_model=args.width)
     model = build_model(cfg)
     fl = FLConfig(
         num_devices=args.devices, rounds=args.rounds, batch_size=args.batch_size,
@@ -125,7 +145,9 @@ def main() -> None:
         mean_contact=args.contact, mean_intercontact=args.intercontact,
         lyapunov_v=args.v_weight, seed=args.seed,
         sparsifier="exact" if model.num_params() < 2_000_000 else "sampled",
-        telemetry=args.telemetry,
+        telemetry=args.telemetry or args.perdevice or args.probes,
+        telemetry_perdevice=args.perdevice,
+        telemetry_probes=args.probes,
     )
     log.info("arch=%s params=%d policy=%s rounds=%d devices=%d",
              cfg.name, model.num_params(), args.policy, args.rounds, args.devices)
@@ -155,12 +177,21 @@ def main() -> None:
     save(args.workdir, args.rounds, res.state.w)
     with open(os.path.join(args.workdir, "history.json"), "w") as f:
         json.dump({"args": vars(args), "history": res.history}, f, indent=2)
+    # the same resolution run_afl used — registry alone, or the suite
+    # carrying the per-device table / theory probes
+    telemetry = resolve_telemetry(fl, None, s=model.num_params())
     with JsonlSink(os.path.join(args.workdir, "telemetry.jsonl")) as sink:
         sink.extend(tracer.events())
         if res.telemetry is not None:
             sink.emit({"kind": "metrics", **to_jsonable(res.telemetry)})
-    if res.telemetry is not None:
-        print(AFL_REGISTRY.summary(res.telemetry))
+            if (isinstance(telemetry, TelemetrySuite)
+                    and telemetry.probes is not None
+                    and res.telemetry.get("probes") is not None):
+                rep = report_from_config(
+                    telemetry.probes, res.telemetry["probes"], fl)
+                sink.emit({"kind": "probe_report", **rep})
+    if res.telemetry is not None and telemetry is not None:
+        print(telemetry.summary(res.telemetry))
     log.info("phase wall clock:\n%s", tracer.summary())
     log.info("final eval=%.4f; wrote %s", res.final_eval, args.workdir)
 

@@ -3,14 +3,23 @@
 See README.md here for the metric catalog and the scan/pjit carry
 contract.  Quick map:
 
-* ``metrics``  — ``MetricRegistry`` (counters / gauges / fixed-bin
+* ``metrics``   — ``MetricRegistry`` (counters / gauges / fixed-bin
   histograms) whose state is a pytree carried through ``lax.scan``, the
   pjit step, vmapped seeds, and mesh shards; ``AFL_REGISTRY`` +
-  ``record_round`` are the built-in Algorithm-1 instrumentation.
-* ``tracing``  — ``PhaseTracer`` wall-clock spans with
-  ``block_until_ready`` fencing and optional ``jax.profiler`` hooks.
-* ``export``   — atomic JSONL event sink, ``BENCH_<suite>.json``
-  trajectory files (gated by ``tools/bench_compare.py``).
+  ``record_round`` are the built-in Algorithm-1 instrumentation;
+  ``TelemetrySuite`` composes the registry with the layers below under
+  one carry.
+* ``perdevice`` — ``DeviceTable`` per-client flight recorder ((N,) rows:
+  participation, staleness, tau, bits, energy, EF norm) with top-k
+  straggler extraction at fetch.
+* ``probes``    — ``TheoryProbes`` online theory-vs-practice accumulators
+  compared against ``core/theory.py`` closed forms at fetch.
+* ``tracing``   — ``PhaseTracer`` wall-clock spans (nested, exception-
+  safe) with ``block_until_ready`` fencing and ``jax.profiler`` hooks.
+* ``export``    — atomic JSONL event sink (NaN/inf sanitised to null),
+  ``BENCH_<suite>.json`` trajectory files (``tools/bench_compare.py``).
+* ``report``    — ``render_report``: telemetry.jsonl + snapshots ->
+  self-contained markdown run report (``tools/report.py`` CLI).
 """
 from repro.telemetry.export import (
     JsonlSink,
@@ -18,6 +27,7 @@ from repro.telemetry.export import (
     load_bench,
     parse_csv_row,
     read_jsonl,
+    sanitize,
 )
 from repro.telemetry.metrics import (
     AFL_REGISTRY,
@@ -26,31 +36,59 @@ from repro.telemetry.metrics import (
     Gauge,
     Histogram,
     MetricRegistry,
+    TelemetrySuite,
     afl_registry,
     jit_record,
     merge_fetched,
     record_round,
     to_jsonable,
 )
+from repro.telemetry.perdevice import (
+    DeviceTable,
+    participation_gini,
+    table_to_jsonable,
+    top_by,
+    top_stragglers,
+)
+from repro.telemetry.probes import (
+    TheoryProbes,
+    contact_params,
+    probes_to_jsonable,
+    report_from_config,
+)
+from repro.telemetry.report import ascii_hist, render_report
 from repro.telemetry.tracing import PhaseTracer, Span
 
 __all__ = [
     "AFL_REGISTRY",
     "HIST_KEYS",
     "Counter",
+    "DeviceTable",
     "Gauge",
     "Histogram",
     "JsonlSink",
     "MetricRegistry",
     "PhaseTracer",
     "Span",
+    "TelemetrySuite",
+    "TheoryProbes",
     "afl_registry",
+    "ascii_hist",
+    "contact_params",
     "export_bench",
     "jit_record",
     "load_bench",
     "merge_fetched",
     "parse_csv_row",
+    "participation_gini",
+    "probes_to_jsonable",
     "read_jsonl",
     "record_round",
+    "render_report",
+    "report_from_config",
+    "sanitize",
+    "table_to_jsonable",
     "to_jsonable",
+    "top_by",
+    "top_stragglers",
 ]

@@ -14,8 +14,12 @@ artifact accumulates the suite's history.
 from __future__ import annotations
 
 import json
+import logging
+import math
 import os
 from typing import Iterable, Optional
+
+log = logging.getLogger("repro.telemetry.export")
 
 MAX_BENCH_HISTORY = 20  # previous exports kept in a BENCH file
 
@@ -32,11 +36,43 @@ def _atomic_write(path: str, text: str) -> None:
 # ---------------------------------------------------------------------------
 
 
+def sanitize(obj):
+    """Replace non-finite floats with ``None`` recursively.
+
+    Returns ``(clean, n_replaced)``.  ``json.dumps`` would happily emit
+    ``NaN``/``Infinity`` — which is NOT valid JSON and breaks every strict
+    reader of ``telemetry.jsonl`` — so the sink nulls them out instead of
+    letting one diverged metric poison a whole sweep's artifact.  Only
+    python floats are sanitised; callers convert device/numpy scalars via
+    ``to_jsonable`` first (non-serialisable objects still fail eagerly).
+    """
+    if isinstance(obj, float):
+        return (obj, 0) if math.isfinite(obj) else (None, 1)
+    if isinstance(obj, dict):
+        n = 0
+        out = {}
+        for k, v in obj.items():
+            out[k], dn = sanitize(v)
+            n += dn
+        return out, n
+    if isinstance(obj, (list, tuple)):
+        n = 0
+        items = []
+        for v in obj:
+            cv, dn = sanitize(v)
+            items.append(cv)
+            n += dn
+        return (items if isinstance(obj, list) else tuple(items)), n
+    return obj, 0
+
+
 class JsonlSink:
     """Buffered JSONL writer with atomic flush (write-then-rename).
 
     Events are plain dicts; ``emit`` validates JSON-serialisability
     eagerly so a bad record fails at the call site, not at flush time.
+    Non-finite floats are sanitised to ``null`` with a warning (a NaN'd
+    counter mid-sweep must not kill the sweep or corrupt the JSONL).
     Usable as a context manager (flushes on exit).
     """
 
@@ -45,7 +81,11 @@ class JsonlSink:
         self.events: list[dict] = []
 
     def emit(self, record: dict) -> None:
-        json.dumps(record)  # fail fast on non-jsonable payloads
+        record, bad = sanitize(record)
+        if bad:
+            log.warning("sanitized %d non-finite value(s) to null in %r "
+                        "event", bad, record.get("kind", "?"))
+        json.dumps(record, allow_nan=False)  # fail fast on non-jsonable
         self.events.append(record)
 
     def extend(self, records: Iterable[dict]) -> None:

@@ -214,16 +214,82 @@ class MetricRegistry:
 
 
 # ---------------------------------------------------------------------------
+# Composition: registry + per-device table + theory probes as ONE carry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySuite:
+    """Composite telemetry carried through the engines as a single state.
+
+    A suite bundles up to three accumulators — the global
+    ``MetricRegistry``, a per-client ``perdevice.DeviceTable``, and
+    ``probes.TheoryProbes`` — under the state keys ``"metrics"`` /
+    ``"device"`` / ``"probes"``.  It quacks like a registry everywhere the
+    engines care (``init_state`` / ``merge`` / ``merge_stacked`` /
+    ``fetch`` / ``summary``, plus hashability so it keys the same jit /
+    ``lru_cache`` entries), and ``record_round`` dispatches to
+    ``TelemetrySuite.record`` — so the scan body, the loop's
+    ``jit_record``, the pjit step, and the seed-vmap stacking in
+    ``experiments/batch.py`` all work with a suite UNCHANGED.  The
+    zero-mid-run-host-sync contract is inherited: every sub-state is a
+    jnp pytree fetched once at run end.
+    """
+
+    metrics: Optional[MetricRegistry] = None
+    device: Optional[object] = None  # perdevice.DeviceTable
+    probes: Optional[object] = None  # probes.TheoryProbes
+
+    def _parts(self):
+        return [(k, a) for k, a in (("metrics", self.metrics),
+                                    ("device", self.device),
+                                    ("probes", self.probes))
+                if a is not None]
+
+    def init_state(self) -> dict:
+        return {k: a.init_state() for k, a in self._parts()}
+
+    def record(self, state: dict, metrics: Mapping, tau) -> dict:
+        out = {}
+        for k, a in self._parts():
+            if k == "metrics":
+                out[k] = record_round(a, state[k], metrics, tau)
+            else:
+                out[k] = a.update(state[k], metrics, tau)
+        return out
+
+    def merge(self, a: dict, b: dict) -> dict:
+        return {k: acc.merge(a[k], b[k]) for k, acc in self._parts()}
+
+    def merge_stacked(self, state: dict, axis: int = 0) -> dict:
+        return {k: a.merge_stacked(state[k], axis=axis)
+                for k, a in self._parts()}
+
+    def fetch(self, state: dict) -> dict:
+        return {k: a.fetch(state[k]) for k, a in self._parts()}
+
+    def summary(self, snapshot: dict) -> str:
+        parts = []
+        if self.metrics is not None:
+            parts.append(self.metrics.summary(snapshot["metrics"]))
+        if self.device is not None:
+            parts.append("per-device stragglers (fewest contacts first):")
+            parts.append(self.device.summary(snapshot["device"]))
+        if self.probes is not None:
+            m = self.probes.measured(snapshot["probes"])
+            parts.append(
+                "probes (measured): "
+                + "  ".join(f"{k}={v:.4g}" for k, v in m.items())
+            )
+        return "\n".join(parts)
+
+
+# ---------------------------------------------------------------------------
 # Host-side snapshot algebra (post-fetch / post-JSONL merging)
 # ---------------------------------------------------------------------------
 
 
-def merge_fetched(snapshots) -> dict:
-    """Merge fetched (or JSONL-loaded) snapshots: counters/hists add,
-    gauges max — the numpy mirror of ``MetricRegistry.merge``."""
-    snaps = list(snapshots)
-    if not snaps:
-        raise ValueError("no snapshots to merge")
+def _merge_fetched_registry(snaps) -> dict:
     out = {
         "counters": {k: 0.0 for k in snaps[0]["counters"]},
         "gauges": {k: -np.inf for k in snaps[0]["gauges"]},
@@ -240,8 +306,58 @@ def merge_fetched(snapshots) -> dict:
     return out
 
 
+def merge_fetched(snapshots) -> dict:
+    """Merge fetched (or JSONL-loaded) snapshots: counters/hists add,
+    gauges max — the numpy mirror of ``MetricRegistry.merge``.  Suite
+    snapshots (with ``"metrics"`` / ``"device"`` / ``"probes"`` sections)
+    merge section-wise: device fields follow ``perdevice.FIELD_KIND``
+    (sums add, maxima max), probe accumulators all add.
+    """
+    snaps = list(snapshots)
+    if not snaps:
+        raise ValueError("no snapshots to merge")
+    if "counters" in snaps[0]:  # plain registry snapshot
+        return _merge_fetched_registry(snaps)
+    out: dict = {}
+    if "metrics" in snaps[0]:
+        out["metrics"] = _merge_fetched_registry(
+            [s["metrics"] for s in snaps])
+    if "device" in snaps[0]:
+        from repro.telemetry.perdevice import FIELD_KIND
+
+        dev = {}
+        for f, kind in FIELD_KIND.items():
+            if f not in snaps[0]["device"]:
+                continue
+            stack = np.stack([np.asarray(s["device"][f], np.float64)
+                              for s in snaps])
+            dev[f] = (np.sum if kind == "sum" else np.max)(stack, axis=0)
+        dev["rounds"] = float(dev["rounds"])
+        out["device"] = dev
+    if "probes" in snaps[0]:
+        out["probes"] = {
+            f: float(sum(s["probes"][f] for s in snaps))
+            for f in snaps[0]["probes"]
+        }
+    return out
+
+
 def to_jsonable(snapshot: dict) -> dict:
-    """Fetched snapshot -> plain lists/floats for the JSONL sink."""
+    """Fetched snapshot -> plain lists/floats for the JSONL sink.  Suite
+    snapshots serialise section-wise (same keys back out of
+    ``read_jsonl`` + ``merge_fetched``)."""
+    if "counters" not in snapshot:  # suite snapshot
+        out: dict = {}
+        if "metrics" in snapshot:
+            out["metrics"] = to_jsonable(snapshot["metrics"])
+        if "device" in snapshot:
+            from repro.telemetry.perdevice import table_to_jsonable
+
+            out["device"] = table_to_jsonable(snapshot["device"])
+        if "probes" in snapshot:
+            out["probes"] = {k: float(v)
+                             for k, v in snapshot["probes"].items()}
+        return out
     return {
         "counters": {k: float(v) for k, v in snapshot["counters"].items()},
         "gauges": {k: float(v) for k, v in snapshot["gauges"].items()},
@@ -300,8 +416,7 @@ def afl_registry() -> MetricRegistry:
 AFL_REGISTRY = afl_registry()
 
 
-def record_round(registry: MetricRegistry, state: dict, metrics: dict,
-                 tau) -> dict:
+def record_round(registry, state: dict, metrics: dict, tau) -> dict:
     """Fold one AFL round's metric dict into the accumulation state.
 
     Uses only the metric keys ALL three execution paths emit
@@ -309,7 +424,14 @@ def record_round(registry: MetricRegistry, state: dict, metrics: dict,
     uploads/success/theta/bits/k/b/energy — so the same function is the
     telemetry stage of every engine and their states stay bit-comparable.
     ``tau`` is the round's (N,) contact-duration input.
+
+    ``registry`` may also be a :class:`TelemetrySuite` (or anything with a
+    ``record`` method): the call dispatches, which is how the per-device
+    table and theory probes ride every engine without touching the
+    scan-body / pjit-step / loop call sites.
     """
+    if not isinstance(registry, MetricRegistry):
+        return registry.record(state, metrics, tau)
     okf = metrics["uploads"]
     succ = metrics["success"]
     return registry.update(

@@ -1,0 +1,241 @@
+"""Per-device flight recorder: a ``DeviceTable`` of client-resident metrics.
+
+``MetricRegistry`` (metrics.py) answers *what the federation did*;
+``DeviceTable`` answers *which device did it*.  Its accumulation state is a
+dict of ``(N, ...)`` jnp arrays — one row per client — carried exactly like
+the registry state: through the ``lax.scan`` body of the compiled engine,
+the pjit distributed step (shard the rows over the client mesh with
+``core.distributed.telemetry_shardings``; every update is elementwise per
+client, so GSPMD inserts NO collectives mid-run and the rows merge only at
+fetch), and the vmapped seed axis (leading ``(S, N, ...)`` batch).  Zero
+host round-trips mid-run; ``fetch`` is the one sync, same contract as
+``MetricRegistry``.
+
+Bit-identity: the count-like fields (``contacts``, ``successes``,
+``failures``, ``last_contact``, ``staleness_sum``, ``staleness_max``) are
+sums/maxima of exact-integer-valued f32 updates applied elementwise in
+round order — no cross-device reduction ever happens, so the loop runner,
+the scan engine, and the (sharded) pjit step produce *bit-identical*
+tables for the same seeded run (tests/test_telemetry.py).  Float fields
+(``tau_sum``, ``bits_sum``, ``energy_sum``, ``e_norm2``) are also
+elementwise accumulations and agree bitwise whenever the per-round metric
+values do (pinned by the distributed parity suite).
+
+Host-side, ``rows``/``top_stragglers``/``top_by`` turn a fetched table
+into per-device records and top-k straggler/outlier extractions — the
+debugging substrate for "which devices starve" questions that global
+aggregates cannot answer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# merge semantics per field (used by merge/merge_stacked and by
+# metrics.merge_fetched for the host-side JSONL mirror):
+#   sum — accumulators add across seeds/shards
+#   max — last-value / extremum fields take the maximum
+FIELD_KIND = {
+    "rounds": "sum",
+    "contacts": "sum",
+    "successes": "sum",
+    "failures": "sum",
+    "last_contact": "max",
+    "staleness_sum": "sum",
+    "staleness_max": "max",
+    "tau_sum": "sum",
+    "bits_sum": "sum",
+    "energy_sum": "sum",
+    "e_norm2": "max",
+}
+
+#: per-device (N,) fields, in state order; "rounds" is the extra scalar
+DEVICE_FIELDS = tuple(k for k in FIELD_KIND if k != "rounds")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceTable:
+    """Per-client flight-recorder spec (frozen + hashable: a table keys
+    the engines' jit caches exactly like ``MetricRegistry``).
+
+    ``n`` is the federation size; every per-device field is an ``(n,)``
+    f32 array in the accumulation state.
+    """
+
+    n: int
+
+    # -- state ---------------------------------------------------------------
+
+    def init_state(self) -> dict:
+        state = {f: jnp.zeros((self.n,), jnp.float32) for f in DEVICE_FIELDS}
+        state["rounds"] = jnp.zeros((), jnp.float32)
+        return state
+
+    # -- update (jnp-traceable, elementwise per client) ----------------------
+
+    def update(self, state: dict, metrics: Mapping, tau) -> dict:
+        """Fold one round's engine metric dict into the table.
+
+        Uses only keys all three execution paths emit (``afl_round``, the
+        scan body, the distributed step): uploads/success/theta/bits/
+        energy, plus ``e_norm2`` (EF-memory squared norm) when present.
+        Every update is elementwise on the client axis — the property that
+        keeps a client-sharded table collective-free until fetch.
+        """
+        okf = jnp.asarray(metrics["uploads"], jnp.float32)
+        succ = jnp.asarray(metrics["success"], jnp.float32)
+        theta = jnp.asarray(metrics["theta"], jnp.float32)
+        tau = jnp.asarray(tau, jnp.float32)
+        r = state["rounds"] + 1.0
+        new = {
+            "rounds": r,
+            "contacts": state["contacts"] + okf,
+            "successes": state["successes"] + succ,
+            "failures": state["failures"] + (okf - succ),
+            "last_contact": jnp.where(okf > 0, r, state["last_contact"]),
+            "staleness_sum": state["staleness_sum"] + theta * okf,
+            "staleness_max": jnp.maximum(state["staleness_max"], theta * okf),
+            "tau_sum": state["tau_sum"] + tau * okf,
+            "bits_sum": state["bits_sum"]
+            + jnp.asarray(metrics["bits"], jnp.float32),
+            "energy_sum": state["energy_sum"]
+            + jnp.asarray(metrics["energy"], jnp.float32),
+        }
+        # EF-memory norm: last value wins (a gauge per client); engines
+        # that do not emit it leave the previous value in place
+        e2 = metrics.get("e_norm2")
+        new["e_norm2"] = (
+            jnp.asarray(e2, jnp.float32) if e2 is not None
+            else state["e_norm2"]
+        )
+        return new
+
+    # -- merge ---------------------------------------------------------------
+
+    def merge(self, a: dict, b: dict) -> dict:
+        """Combine two tables (seeds / shards): sums add, maxima max."""
+        return {
+            f: (jnp.add if FIELD_KIND[f] == "sum" else jnp.maximum)(
+                a[f], b[f])
+            for f in a
+        }
+
+    def merge_stacked(self, state: dict, axis: int = 0) -> dict:
+        """Collapse a leading batch axis (vmapped seeds, stacked shards)."""
+        return {
+            f: (jnp.sum if FIELD_KIND[f] == "sum" else jnp.max)(
+                state[f], axis=axis)
+            for f in state
+        }
+
+    # -- host side -----------------------------------------------------------
+
+    def fetch(self, state: dict) -> dict:
+        """Device state -> host snapshot (np arrays + float rounds)."""
+        out = {f: np.asarray(state[f]) for f in DEVICE_FIELDS}
+        out["rounds"] = float(state["rounds"])
+        return out
+
+    def summary(self, snapshot: dict, k: int = 5) -> str:
+        """Terminal table of the k worst stragglers."""
+        lines = [f"{'device':>6s} {'contacts':>9s} {'succ':>6s} "
+                 f"{'fail':>6s} {'stale_mean':>11s} {'last_r':>7s} "
+                 f"{'Mbits':>8s} {'J':>8s}"]
+        for row in top_stragglers(snapshot, k=k):
+            lines.append(
+                f"{row['device']:>6d} {row['contacts']:>9.0f} "
+                f"{row['successes']:>6.0f} {row['failures']:>6.0f} "
+                f"{row['staleness_mean']:>11.2f} {row['last_contact']:>7.0f} "
+                f"{row['bits_sum'] / 1e6:>8.2f} {row['energy_sum']:>8.2f}"
+            )
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Host-side row extraction: stragglers and outliers
+# ---------------------------------------------------------------------------
+
+
+def rows(snapshot: dict) -> list[dict]:
+    """Fetched table -> one record per device, with derived stats."""
+    n = len(np.asarray(snapshot["contacts"]))
+    out = []
+    for i in range(n):
+        contacts = float(np.asarray(snapshot["contacts"])[i])
+        succ = float(np.asarray(snapshot["successes"])[i])
+        rec = {
+            "device": i,
+            "contacts": contacts,
+            "successes": succ,
+            "failures": float(np.asarray(snapshot["failures"])[i]),
+            "success_rate": succ / max(contacts, 1.0),
+            "last_contact": float(np.asarray(snapshot["last_contact"])[i]),
+            "staleness_mean":
+                float(np.asarray(snapshot["staleness_sum"])[i])
+                / max(contacts, 1.0),
+            "staleness_max": float(np.asarray(snapshot["staleness_max"])[i]),
+            "tau_mean": float(np.asarray(snapshot["tau_sum"])[i])
+            / max(contacts, 1.0),
+            "bits_sum": float(np.asarray(snapshot["bits_sum"])[i]),
+            "energy_sum": float(np.asarray(snapshot["energy_sum"])[i]),
+            "e_norm2": float(np.asarray(snapshot["e_norm2"])[i]),
+        }
+        out.append(rec)
+    return out
+
+
+def top_by(snapshot: dict, field: str, k: int = 5,
+           largest: bool = True) -> list[dict]:
+    """Top-k outlier devices by any derived row field."""
+    recs = rows(snapshot)
+    recs.sort(key=lambda r: r[field], reverse=largest)
+    return recs[:k]
+
+
+def top_stragglers(snapshot: dict, k: int = 5) -> list[dict]:
+    """The k most starved devices: fewest participations first, oldest
+    last-contact breaking ties, then highest mean staleness."""
+    recs = rows(snapshot)
+    recs.sort(key=lambda r: (r["contacts"], r["last_contact"],
+                             -r["staleness_mean"]))
+    return recs[:k]
+
+
+def participation_gini(snapshot: dict) -> float:
+    """Gini coefficient of per-device participation counts (0 = uniform,
+    1 = one device does everything) — a one-number starvation signal."""
+    c = np.sort(np.asarray(snapshot["contacts"], np.float64))
+    n = len(c)
+    total = c.sum()
+    if n == 0 or total <= 0:
+        return 0.0
+    cum = np.cumsum(c)
+    return float((n + 1 - 2.0 * cum.sum() / total) / n)
+
+
+def table_to_jsonable(snapshot: Optional[dict]) -> Optional[dict]:
+    """Fetched table -> plain lists/floats for the JSONL sink."""
+    if snapshot is None:
+        return None
+    return {
+        f: ([float(x) for x in np.asarray(v)]
+            if np.ndim(v) else float(v))
+        for f, v in snapshot.items()
+    }
+
+
+# imported lazily by jit-traced paths; kept here for API symmetry
+__all__ = [
+    "DEVICE_FIELDS",
+    "DeviceTable",
+    "FIELD_KIND",
+    "participation_gini",
+    "rows",
+    "table_to_jsonable",
+    "top_by",
+    "top_stragglers",
+]

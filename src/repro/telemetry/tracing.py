@@ -30,6 +30,9 @@ class Span:
     start: float  # perf_counter seconds
     duration: float
     meta: dict
+    parent: Optional[str] = None  # enclosing span's name (nesting)
+    depth: int = 0  # nesting depth at entry (0 = top level)
+    error: Optional[str] = None  # exception type name if the body raised
 
 
 class PhaseTracer:
@@ -40,11 +43,17 @@ class PhaseTracer:
         self.profile_dir = profile_dir or None
         self.spans: list[Span] = []
         self._tracing = False
+        self._stack: list[str] = []  # open span names (nesting)
 
     # -- spans ---------------------------------------------------------------
 
     @contextmanager
     def span(self, name: str, **meta):
+        """Record a wall-clock span.  Exception-safe: a body that raises
+        still lands its span (with the exception type under ``error``),
+        so a crashed sweep's trace shows WHERE the time went before the
+        failure.  Spans nest — an inner span records its enclosing span
+        as ``parent`` and its ``depth``, surfaced by ``events()``."""
         ann = None
         if self.profile_dir is not None:
             try:
@@ -52,12 +61,21 @@ class PhaseTracer:
                 ann.__enter__()
             except Exception:  # pragma: no cover - profiler backend-dependent
                 ann = None
+        parent = self._stack[-1] if self._stack else None
+        depth = len(self._stack)
+        self._stack.append(name)
+        err: Optional[str] = None
         t0 = time.perf_counter()
         try:
             yield self
+        except BaseException as e:
+            err = type(e).__name__
+            raise
         finally:
+            self._stack.pop()
             self.spans.append(
-                Span(name, t0, time.perf_counter() - t0, dict(meta))
+                Span(name, t0, time.perf_counter() - t0, dict(meta),
+                     parent=parent, depth=depth, error=err)
             )
             if ann is not None:
                 ann.__exit__(None, None, None)
@@ -116,10 +134,17 @@ class PhaseTracer:
         return "\n".join(lines)
 
     def events(self) -> list[dict]:
-        """Span records for the JSONL sink."""
-        return [
-            {"kind": "span", "name": s.name,
-             "start_s": round(s.start, 6),
-             "duration_s": round(s.duration, 6), **s.meta}
-            for s in self.spans
-        ]
+        """Span records for the JSONL sink (parent/depth attribute nested
+        spans; ``error`` marks spans whose body raised)."""
+        out = []
+        for s in self.spans:
+            ev = {"kind": "span", "name": s.name,
+                  "start_s": round(s.start, 6),
+                  "duration_s": round(s.duration, 6), **s.meta}
+            if s.parent is not None:
+                ev["parent"] = s.parent
+                ev["depth"] = s.depth
+            if s.error is not None:
+                ev["error"] = s.error
+            out.append(ev)
+        return out

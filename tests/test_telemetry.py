@@ -28,17 +28,24 @@ from repro.telemetry import (
     AFL_REGISTRY,
     HIST_KEYS,
     Counter,
+    DeviceTable,
     Gauge,
     Histogram,
     JsonlSink,
     MetricRegistry,
     PhaseTracer,
+    TelemetrySuite,
+    TheoryProbes,
     export_bench,
     load_bench,
     merge_fetched,
     parse_csv_row,
+    participation_gini,
     read_jsonl,
+    render_report,
+    report_from_config,
     to_jsonable,
+    top_stragglers,
 )
 
 ROUNDS, EVERY = 8, 4
@@ -69,6 +76,46 @@ def _assert_snapshots_equal(a: dict, b: dict, err=""):
         np.testing.assert_allclose(a["counters"][k], b["counters"][k],
                                    rtol=1e-6, err_msg=f"{err} {k}")
     assert a["gauges"] == b["gauges"], err
+
+
+# count-like (N,) fields: exact-integer f32 updates, bit-identical across
+# engines; float accumulators agree to rounding; e_norm2 is a param-dim
+# reduction whose summation order differs between compiled programs, so it
+# only gets an absolute tolerance (values near denormal scale here)
+_TABLE_EXACT = ("rounds", "contacts", "successes", "failures",
+                "last_contact", "staleness_sum", "staleness_max")
+_TABLE_CLOSE = ("tau_sum", "bits_sum", "energy_sum")
+
+
+def _assert_tables_equal(a: dict, b: dict, err=""):
+    for k in _TABLE_EXACT:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=f"{err} table {k}")
+    for k in _TABLE_CLOSE:
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-6,
+                                   err_msg=f"{err} table {k}")
+    np.testing.assert_allclose(a["e_norm2"], b["e_norm2"], rtol=0.5,
+                               atol=1e-9, err_msg=f"{err} table e_norm2")
+
+
+def _assert_probes_equal(a: dict, b: dict, err=""):
+    for k in ("rounds", "contacts", "successes"):
+        assert a[k] == b[k], (err, k)
+    for k in a:
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-5, atol=1e-9,
+                                   err_msg=f"{err} probe {k}")
+
+
+def _assert_suites_equal(a: dict, b: dict, err=""):
+    _assert_snapshots_equal(a["metrics"], b["metrics"], err)
+    _assert_tables_equal(a["device"], b["device"], err)
+    _assert_probes_equal(a["probes"], b["probes"], err)
+
+
+def _suite_for(model, fl):
+    return TelemetrySuite(
+        metrics=AFL_REGISTRY, device=DeviceTable(fl.num_devices),
+        probes=TheoryProbes(s=model.num_params(), u=fl.value_bits),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +283,238 @@ def test_fl_config_knob_and_resolution(federation):
 
 
 # ---------------------------------------------------------------------------
+# TelemetrySuite: flight recorder + probes through every engine
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_telemetry_suite_knobs(federation):
+    """FLConfig suite knobs build an equivalent (hashable) suite each call
+    — one jit-cache key — and probes require a model size."""
+    import dataclasses
+
+    cfg, model, fl, shard, ev = federation
+    s = model.num_params()
+    fl_suite = dataclasses.replace(fl, telemetry_perdevice=True,
+                                   telemetry_probes=True)
+    t1 = resolve_telemetry(fl_suite, None, s=s)
+    t2 = resolve_telemetry(fl_suite, None, s=s)
+    assert isinstance(t1, TelemetrySuite)
+    assert t1 == t2 and hash(t1) == hash(t2)
+    assert t1.device.n == fl.num_devices
+    assert t1.probes.s == s
+    # s=0 (unknown model size): probes silently drop, table stays
+    t3 = resolve_telemetry(fl_suite, None, s=0)
+    assert t3.device is not None and t3.probes is None
+    # an explicit registry still wins over the knobs
+    assert resolve_telemetry(fl_suite, AFL_REGISTRY, s=s) is AFL_REGISTRY
+    # device-only knob: no probes section in the snapshot
+    fl_dev = dataclasses.replace(fl, telemetry_perdevice=True)
+    t4 = resolve_telemetry(fl_dev, None, s=s)
+    snap = t4.fetch(t4.init_state())
+    assert snap["device"] is not None and snap.get("probes") is None
+
+
+def test_suite_loop_scan_parity(federation):
+    """Same seeded run, suite carried through both engines: per-device
+    count fields bit-identical, probe accumulators equal."""
+    cfg, model, fl, shard, ev = federation
+    suite = _suite_for(model, fl)
+    loop = run_afl(model, cfg, fl, "mads", shard, ev, rounds=ROUNDS,
+                   eval_every=EVERY, seed=3, telemetry=suite)
+    scan = run_afl_scanned(model, cfg, fl, "mads", shard, ev, rounds=ROUNDS,
+                           eval_every=EVERY, seed=3, telemetry=suite)
+    _assert_suites_equal(loop.telemetry, scan.telemetry, "suite loop-vs-scan")
+    dev = loop.telemetry["device"]
+    assert dev["rounds"] == ROUNDS
+    # table totals reconcile with the registry's federation-wide counters
+    c = loop.telemetry["metrics"]["counters"]
+    assert float(dev["contacts"].sum()) == c["contacts"]
+    assert float(dev["successes"].sum()) == c["successes"]
+    np.testing.assert_allclose(float(dev["bits_sum"].sum()),
+                               c["bits_total"], rtol=1e-5)
+    # and with the probe accumulators
+    p = loop.telemetry["probes"]
+    assert p["rounds"] == ROUNDS
+    assert p["contacts"] == c["contacts"]
+    assert p["successes"] == c["successes"]
+
+
+def test_suite_dist_step_matches_loop(federation):
+    """The pjit step's in-program suite recording equals the loop's."""
+    cfg, model, fl, shard, ev = federation
+    from repro.core.distributed import telemetry_shardings
+
+    suite = _suite_for(model, fl)
+    policy = BL.ALL["mads"](model.num_params(), fl)
+    dcfg = DistConfig(
+        num_clients=fl.num_devices, learning_rate=fl.learning_rate,
+        rounds=fl.rounds, state_dtype="float32", upload_dtype="float32",
+    )
+    step = jax.jit(make_afl_train_step(model, cfg, dcfg, policy.controller,
+                                       telemetry=suite))
+    provider = build_provider(fl, "mads", None, ROUNDS, 0)
+    budgets = sample_budgets(fl, 0)
+    key = shard.seed_key(0)
+    flat = lambda b: jax.tree.map(
+        lambda v: v.reshape((-1,) + v.shape[2:]), b)
+    _, hist, tstate = run_afl_rounds(
+        step, init_state(model, dcfg, jax.random.key(0)), provider,
+        lambda r: flat(shard.traced_batch(key, r)), budgets,
+        rounds=ROUNDS, telemetry=suite,
+    )
+    loop = run_afl(model, cfg, fl, "mads", shard, ev, rounds=ROUNDS,
+                   eval_every=EVERY, seed=0, telemetry=suite)
+    _assert_suites_equal(suite.fetch(tstate), loop.telemetry,
+                         "suite dist-vs-loop")
+    # sharding spec: (N,) table rows on the client axis, all else replicated
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    sh = telemetry_shardings(suite, mesh)
+    assert set(sh) == {"metrics", "device", "probes"}
+    assert all(s.spec == jax.sharding.PartitionSpec("data")
+               for f, s in sh["device"].items() if f != "rounds")
+    assert sh["device"]["rounds"].spec == jax.sharding.PartitionSpec()
+
+
+def test_suite_seed_vmap_slices(federation):
+    """Vmapped seeds: each per-seed suite slice equals the independent
+    scanned run; merging recovers federation totals per FIELD_KIND."""
+    cfg, model, fl, shard, ev = federation
+    suite = _suite_for(model, fl)
+    batch = run_seed_batch(model, cfg, fl, "mads", shard, ev, seeds=[0, 1],
+                           rounds=ROUNDS, eval_every=EVERY, telemetry=suite)
+    snaps = [r.telemetry for r in batch]
+    assert all(s is not None for s in snaps)
+    for seed, snap in zip((0, 1), snaps):
+        ind = run_afl_scanned(model, cfg, fl, "mads", shard, ev,
+                              rounds=ROUNDS, eval_every=EVERY, seed=seed,
+                              telemetry=suite)
+        _assert_suites_equal(snap, ind.telemetry, f"suite vmap seed {seed}")
+    merged = merge_fetched(snaps)
+    dev = merged["device"]
+    assert dev["rounds"] == 2 * ROUNDS  # sum across seeds
+    np.testing.assert_array_equal(
+        dev["contacts"],
+        np.asarray(snaps[0]["device"]["contacts"])
+        + np.asarray(snaps[1]["device"]["contacts"]))
+    np.testing.assert_array_equal(  # max-kind field merges as max
+        dev["staleness_max"],
+        np.maximum(snaps[0]["device"]["staleness_max"],
+                   snaps[1]["device"]["staleness_max"]))
+    assert merged["probes"]["rounds"] == 2 * ROUNDS
+    # the merged snapshot survives the JSONL sink round-trip
+    rec = json.loads(json.dumps(to_jsonable(merged)))
+    assert len(rec["device"]["contacts"]) == fl.num_devices
+    assert rec["probes"]["contacts"] == merged["probes"]["contacts"]
+
+
+def test_straggler_extraction_and_gini():
+    """Host-side row extraction orders starved devices first."""
+    table = DeviceTable(4)
+    snap = {
+        "contacts": np.asarray([9., 0., 4., 2.]),
+        "successes": np.asarray([8., 0., 2., 1.]),
+        "failures": np.asarray([1., 0., 2., 1.]),
+        "last_contact": np.asarray([10., 0., 6., 9.]),
+        "staleness_sum": np.asarray([9., 0., 40., 4.]),
+        "staleness_max": np.asarray([2., 0., 30., 3.]),
+        "tau_sum": np.asarray([18., 0., 8., 4.]),
+        "bits_sum": np.asarray([9e6, 0., 4e6, 2e6]),
+        "energy_sum": np.asarray([90., 0., 40., 20.]),
+        "e_norm2": np.asarray([1e-3, 0., 2e-3, 5e-4]),
+        "rounds": 10.0,
+    }
+    worst = top_stragglers(snap, k=2)
+    assert [r["device"] for r in worst] == [1, 3]
+    assert worst[0]["contacts"] == 0.0 and worst[0]["success_rate"] == 0.0
+    assert worst[1]["staleness_mean"] == pytest.approx(2.0)
+    gini = participation_gini(snap)
+    assert 0.0 < gini < 1.0
+    uniform = dict(snap, contacts=np.full(4, 5.0))
+    assert participation_gini(uniform) == pytest.approx(0.0, abs=1e-9)
+    # summary renders without touching devices
+    assert "stale_mean" in table.summary(snap)
+
+
+def test_probes_calibrated_synthetic():
+    """Drive the probes with a synthetic run matching the theory's
+    generative model (tau ~ Exp(c), Proposition-1 spend): measured terms
+    land on the closed forms."""
+    from repro.core import theory
+
+    s, u, c, lam, delta, rate = 4096, 16, 6.0, 30.0, 10.0, 50.0
+    n_dev, n_rounds = 64, 400
+    probes = TheoryProbes(s=s, u=u)
+    state = probes.init_state()
+    rng = np.random.default_rng(7)
+    since = np.zeros(n_dev)  # rounds since last successful upload
+    bitcost = u + np.log2(s)
+    # Lemma 2 counts staleness in rounds of length delta; a round overlaps
+    # a contact with probability 1 - exp(-delta/lam) under the renewal model
+    p_contact = 1.0 - np.exp(-delta / lam)
+    for _ in range(n_rounds):
+        okf = (rng.random(n_dev) < p_contact).astype(np.float32)
+        tau = rng.exponential(c, n_dev).astype(np.float32) * okf
+        k = np.minimum(tau * rate / bitcost, s)
+        succ = okf * (k >= 1.0)
+        theta = since  # staleness in rounds at this round
+        m = {"uploads": jnp.asarray(okf), "success": jnp.asarray(succ),
+             "theta": jnp.asarray(theta, jnp.float32),
+             "k": jnp.asarray(k, jnp.float32),
+             "bits": jnp.asarray(tau * rate * (k >= 1.0), jnp.float32),
+             "energy": jnp.zeros(n_dev, jnp.float32),
+             "x_norm2": jnp.ones(n_dev, jnp.float32)}
+        state = probes.update(state, m, jnp.asarray(tau))
+        since = np.where(succ > 0, 0.0, since + 1.0)
+    rep = probes.report(probes.fetch(state), c=c, lam=lam, delta=delta,
+                        rate=rate, n=n_dev)
+    t = rep["terms"]
+    # P(k >= 1) = P(tau >= bitcost/rate) = gamma exactly under Exp(c)
+    assert abs(t["success_rate"]["delta"]) < 0.03
+    assert t["success_rate"]["expected"] == pytest.approx(
+        theory.gamma(rate, c, s, u))
+    # E[(s-k)/s] matches the Monte-Carlo closed form
+    assert abs(t["error_fraction"]["delta"]) < 0.05
+    # Lemma 2 is a bound for a different renewal model — same order of
+    # magnitude is the meaningful check
+    th = t["staleness_second_moment"]
+    assert th["expected"] == pytest.approx(
+        theory.staleness_second_moment(c, lam, delta))
+    assert 0.3 < (th["measured"] + 1.0) / th["expected"] < 3.0
+    # measured mean rate self-calibrates to the true A (bits = rate * tau)
+    assert rep["measured"]["mean_rate"] == pytest.approx(rate, rel=1e-4)
+    th1 = rep["theorem1"]
+    assert th1["total"] > 0 and np.isfinite(th1["total"])
+    assert th1["total"] == pytest.approx(
+        th1["t1_init_gap"] + th1["t2_sparsify_staleness_coupling"]
+        + th1["t3_staleness_sq"] + th1["t4_grad_noise"])
+    # the terminal table renders every term
+    assert "success_rate" in probes.summary(rep)
+
+
+def test_probe_report_from_config(federation):
+    """End-to-end: a scanned run with probes produces a finite report at
+    the FLConfig's contact operating point."""
+    import dataclasses
+
+    cfg, model, fl, shard, ev = federation
+    fl_p = dataclasses.replace(fl, telemetry_probes=True)
+    res = run_afl_scanned(model, cfg, fl_p, "mads", shard, ev, rounds=ROUNDS,
+                          eval_every=EVERY, seed=3)
+    assert res.telemetry is not None and res.telemetry["probes"] is not None
+    suite = resolve_telemetry(fl_p, None, s=model.num_params())
+    rep = report_from_config(suite.probes, res.telemetry["probes"], fl_p)
+    assert rep["c"] == fl.mean_contact and rep["lam"] == fl.mean_intercontact
+    assert set(rep["terms"]) == {"error_fraction",
+                                 "staleness_second_moment", "success_rate"}
+    for t in rep["terms"].values():
+        assert np.isfinite(t["measured"]) and np.isfinite(t["expected"])
+    assert 0.0 <= rep["terms"]["success_rate"]["measured"] <= 1.0
+    assert np.isfinite(rep["theorem1"]["total"])
+
+
+# ---------------------------------------------------------------------------
 # tracer
 # ---------------------------------------------------------------------------
 
@@ -259,6 +538,28 @@ def test_tracer_spans_and_fence():
     # without profile_dir, start/stop are no-ops
     tracer.start()
     tracer.stop()
+
+
+def test_tracer_nested_spans_and_exceptions():
+    """Nested spans record parent/depth; a raising span still lands its
+    record (with the error type) and the stack unwinds cleanly."""
+    tracer = PhaseTracer()
+    with tracer.span("outer"):
+        with tracer.span("inner"):
+            pass
+        with pytest.raises(ValueError):
+            with tracer.span("broken"):
+                raise ValueError("boom")
+    with tracer.span("after"):  # stack recovered: top-level again
+        pass
+    ev = {e["name"]: e for e in tracer.events()}
+    assert ev["inner"]["parent"] == "outer" and ev["inner"]["depth"] == 1
+    assert ev["broken"]["parent"] == "outer"
+    assert ev["broken"]["error"] == "ValueError"
+    assert "error" not in ev["inner"]
+    assert "parent" not in ev["outer"] and "parent" not in ev["after"]
+    assert ev["outer"]["duration_s"] >= ev["inner"]["duration_s"]
+    json.dumps(list(ev.values()))  # sink-ready with the new fields
 
 
 # ---------------------------------------------------------------------------
@@ -300,6 +601,87 @@ def test_jsonl_sink_roundtrip_and_aggregate(tmp_path):
         2.0 * np.asarray(snap["hist"]["staleness"], np.float64))
     # summary renders from a merged JSONL snapshot too
     assert "success_rate" in reg.summary(agg)
+
+
+def test_jsonl_sink_sanitizes_nonfinite(tmp_path, caplog):
+    """NaN/inf become null (valid JSON) with a warning; serialisability is
+    still validated eagerly."""
+    import logging
+
+    path = tmp_path / "t.jsonl"
+    with caplog.at_level(logging.WARNING, logger="repro.telemetry.export"):
+        with JsonlSink(str(path)) as sink:
+            sink.emit({"kind": "metrics", "ok": 1.5, "bad": float("nan"),
+                       "worse": [float("inf"), 2.0],
+                       "nested": {"neg": float("-inf")}})
+    assert "sanitized 3 non-finite" in caplog.text
+    rec = read_jsonl(str(path))[0]  # strict json.loads round-trips
+    assert rec["ok"] == 1.5 and rec["bad"] is None
+    assert rec["worse"] == [None, 2.0] and rec["nested"]["neg"] is None
+
+
+def test_render_report_sections(tmp_path):
+    """Events from a suite run render every report section; the CLI
+    wrapper writes the same document."""
+    table = DeviceTable(2)
+    probes = TheoryProbes(s=1024, u=8)
+    ts = table.init_state()
+    ps = probes.init_state()
+    reg = AFL_REGISTRY.init_state()
+    from repro.telemetry import record_round
+
+    m = {"uploads": jnp.asarray([1., 0.]), "success": jnp.asarray([1., 0.]),
+         "theta": jnp.asarray([2., 5.]), "bits": jnp.asarray([1e5, 0.]),
+         "k": jnp.asarray([100., 0.]), "b": jnp.asarray([8., 0.]),
+         "energy": jnp.asarray([0.5, 0.]),
+         "x_norm2": jnp.asarray([1., 1.]),
+         "e_norm2": jnp.asarray([1e-4, 2e-4])}
+    tau = jnp.asarray([3., 0.])
+    reg = record_round(AFL_REGISTRY, reg, m, tau)
+    ts = table.update(ts, m, tau)
+    ps = probes.update(ps, m, tau)
+    snap = {"metrics": AFL_REGISTRY.fetch(reg), "device": table.fetch(ts),
+            "probes": probes.fetch(ps)}
+    rep = probes.report(snap["probes"], c=6.0, lam=30.0, delta=10.0)
+    events = [
+        {"kind": "span", "name": "group", "duration_s": 2.0},
+        {"kind": "span", "name": "compile", "parent": "group", "depth": 1,
+         "duration_s": 1.5},
+        {"kind": "span", "name": "broken", "parent": "group", "depth": 1,
+         "duration_s": 0.1, "error": "ValueError"},
+        {"kind": "group_metrics", "group": "mads/exp/v10", "seeds": 1,
+         **to_jsonable(snap)},
+        {"kind": "metrics", **to_jsonable(snap)},
+        {"kind": "probe_report", "group": "mads/exp/v10", **rep},
+    ]
+    json.dumps(events)
+    bench = {"suite": "afl", "rows": [parse_csv_row(
+        "afl_scan_n8,6235.5,rounds_per_s=160.4")], "history": []}
+    text = render_report(events, bench=bench, title="T")
+    for section in ("# T", "## Phase breakdown", "## Federation counters",
+                    "## Distributions", "## Per-group results",
+                    "## Stragglers", "Participation Gini",
+                    "## Theory vs measured", "Theorem-1",
+                    "## Bench trajectory", "(1 raised)", "mads/exp/v10",
+                    "afl_scan_n8"):
+        assert section in text, section
+    # plain-registry events (no suite sections) still render
+    plain = render_report([{"kind": "metrics",
+                            **to_jsonable(snap["metrics"])}])
+    assert "## Federation counters" in plain
+    assert "## Stragglers" not in plain
+    # CLI wrapper: same renderer end to end
+    tpath = tmp_path / "telemetry.jsonl"
+    with JsonlSink(str(tpath)) as sink:
+        sink.extend(events)
+    script = os.path.join(os.path.dirname(__file__), "..", "tools",
+                          "report.py")
+    out = subprocess.run(
+        [sys.executable, script, str(tpath), "--title", "T"],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+    rendered = open(tmp_path / "report.md").read()
+    assert "## Theory vs measured" in rendered
 
 
 def test_bench_export_trajectory_and_compare(tmp_path):
@@ -401,3 +783,71 @@ def test_two_device_mesh_histograms_bit_identical():
                          capture_output=True, text=True, timeout=1200)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "MESH_TELEMETRY_OK" in out.stdout
+
+
+MESH_SUITE_SCRIPT = r"""
+import jax
+from repro.launch.mesh import force_host_device_count
+force_host_device_count(2)
+import numpy as np
+
+from repro.configs import FLConfig, get_config
+from repro.experiments import DataShard, run_seed_batch
+from repro.launch.mesh import make_seed_mesh
+from repro.launch.train import build_device_data
+from repro.models.registry import build_model
+from repro.telemetry import (AFL_REGISTRY, DeviceTable, TelemetrySuite,
+                             TheoryProbes, merge_fetched)
+
+assert jax.device_count() == 2, jax.devices()
+
+cfg = get_config("resnet9-cifar10").replace(d_model=4)
+model = build_model(cfg)
+fl = FLConfig(num_devices=4, rounds=6, batch_size=8, learning_rate=0.02,
+              mean_contact=6.0, mean_intercontact=30.0,
+              energy_budget=(40.0, 80.0))
+dev, ev = build_device_data(cfg, fl, train_n=160, eval_n=64, seed=0)
+shard = DataShard(dev, fl.batch_size, seed=0)
+suite = TelemetrySuite(
+    metrics=AFL_REGISTRY, device=DeviceTable(fl.num_devices),
+    probes=TheoryProbes(s=model.num_params(), u=fl.value_bits))
+
+mesh = make_seed_mesh(2)
+assert mesh is not None
+sharded = run_seed_batch(model, cfg, fl, "mads", shard, ev, seeds=[0, 1],
+                         rounds=6, eval_every=3, mesh=mesh, telemetry=suite)
+single = run_seed_batch(model, cfg, fl, "mads", shard, ev, seeds=[0, 1],
+                        rounds=6, eval_every=3, mesh=None, telemetry=suite)
+EXACT = ("rounds", "contacts", "successes", "failures", "last_contact",
+         "staleness_sum", "staleness_max")
+for i in range(2):
+    a, b = sharded[i].telemetry, single[i].telemetry
+    for k in a["metrics"]["hist"]:
+        assert np.array_equal(a["metrics"]["hist"][k],
+                              b["metrics"]["hist"][k]), (i, k)
+    for k in EXACT:
+        assert np.array_equal(a["device"][k], b["device"][k]), (i, k)
+    for k in ("tau_sum", "bits_sum", "energy_sum"):
+        assert np.allclose(a["device"][k], b["device"][k], rtol=1e-6), (i, k)
+    for k in ("rounds", "contacts", "successes"):
+        assert a["probes"][k] == b["probes"][k], (i, k)
+    for k in a["probes"]:
+        assert np.allclose(a["probes"][k], b["probes"][k], rtol=1e-5,
+                           atol=1e-9), (i, k)
+m = merge_fetched([r.telemetry for r in sharded])
+assert m["device"]["rounds"] == 12
+assert m["probes"]["rounds"] == 12
+print("MESH_SUITE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_two_device_mesh_suite_bit_identical():
+    """The full suite (registry + flight recorder + probes) sharded over 2
+    simulated host devices matches the unsharded per-seed snapshots."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", MESH_SUITE_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "MESH_SUITE_OK" in out.stdout

@@ -1,0 +1,47 @@
+#!/usr/bin/env python
+"""Render a markdown run report from a telemetry.jsonl event stream.
+
+    PYTHONPATH=src python tools/report.py runs/sweep/telemetry.jsonl \
+        --bench bench-out/BENCH_afl.json --out runs/sweep/report.md
+
+Sections (present when the events carry them): phase-time breakdown from
+PhaseTracer spans, federation counters + ASCII histograms, per-group
+results, the per-device straggler table, theory-vs-measured probe tables,
+and the BENCH_* throughput trajectory.  CI runs this on the smoke-sweep
+telemetry and uploads the report as a build artifact.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.telemetry import load_bench, read_jsonl, render_report  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="telemetry.jsonl (+ BENCH json) -> markdown run report")
+    ap.add_argument("telemetry", help="path to a run's telemetry.jsonl")
+    ap.add_argument("--bench", default="",
+                    help="optional BENCH_<suite>.json trajectory file")
+    ap.add_argument("--out", default="",
+                    help="output path (default: report.md next to the input)")
+    ap.add_argument("--title", default="Run report")
+    args = ap.parse_args()
+
+    events = read_jsonl(args.telemetry)
+    bench = load_bench(args.bench) if args.bench else None
+    text = render_report(events, bench=bench, title=args.title)
+
+    out = args.out or os.path.join(
+        os.path.dirname(os.path.abspath(args.telemetry)), "report.md")
+    with open(out, "w") as f:
+        f.write(text)
+    print(out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
