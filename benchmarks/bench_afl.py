@@ -12,6 +12,12 @@ cadence) through the three execution paths at N=20 and N=100 devices:
 * ``afl_scan_telem_nX`` — the scan path with the built-in telemetry
   registry (``repro.telemetry.AFL_REGISTRY``) threaded through the carry;
   its ``overhead_vs_scan`` derived metric is the instrumentation cost.
+* ``afl_scan_het_nX`` — the scan path with the heterogeneity layer
+  (``scenarios/heterogeneity``) gating the schedule; its
+  ``overhead_vs_scan`` shows the gating is a host-side rewrite, not
+  per-round compiled work.
+* ``afl_scan_jaxscen_nX`` — the scan path fed by the device-resident
+  scenario engine (``scenarios/jax_kinematics``, gauss_markov).
 * ``afl_vmapSX_nX`` — ``experiments.run_seed_batch``: 8 seeds vmapped into
   one program; rounds/sec counts all seeds' rounds.
 
@@ -26,6 +32,7 @@ and vmap speedups grow well beyond the CPU-measured figures.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 from benchmarks.common import csv_row
@@ -102,6 +109,35 @@ def _bench(n_devices: int, rounds: int):
         f"afl_scan_telem_n{n_devices}", telem_wall / rounds * 1e6,
         f"rounds_per_s={rounds / telem_wall:.1f}"
         f";overhead_vs_scan={telem_wall / scan_wall:.2f}x"))
+
+    # heterogeneity layer (availability/dropout gating): a host-side
+    # schedule rewrite riding the SAME compiled scan — the overhead row
+    # shows the layer costs re-tracing once, not per-round work
+    fl_het = dataclasses.replace(fl, het_dropout=0.1, het_availability=0.9)
+    run_afl_scanned(model, cfg, fl_het, "mads", shard, ev, rounds=rounds,
+                    eval_every=EVAL_EVERY)
+    t0 = time.time()
+    run_afl_scanned(model, cfg, fl_het, "mads", shard, ev, rounds=rounds,
+                    eval_every=EVAL_EVERY, seed=1)
+    het_wall = time.time() - t0
+    rows.append(csv_row(
+        f"afl_scan_het_n{n_devices}", het_wall / rounds * 1e6,
+        f"rounds_per_s={rounds / het_wall:.1f}"
+        f";overhead_vs_scan={het_wall / scan_wall:.2f}x"))
+
+    # device-resident scenario generation feeding the scan engine
+    # (scenarios/jax_kinematics: trace -> schedule without host round-trips)
+    fl_jax = dataclasses.replace(fl, mobility_model="gauss_markov",
+                                 speed=10.0, scenario_backend="jax")
+    run_afl_scanned(model, cfg, fl_jax, "mads", shard, ev, rounds=rounds,
+                    eval_every=EVAL_EVERY)
+    t0 = time.time()
+    run_afl_scanned(model, cfg, fl_jax, "mads", shard, ev, rounds=rounds,
+                    eval_every=EVAL_EVERY, seed=1)
+    jaxscen_wall = time.time() - t0
+    rows.append(csv_row(
+        f"afl_scan_jaxscen_n{n_devices}", jaxscen_wall / rounds * 1e6,
+        f"rounds_per_s={rounds / jaxscen_wall:.1f}"))
 
     # seed-vmapped batch (8 runs in one program; count every seed's rounds)
     seeds = tuple(range(N_SEEDS))

@@ -7,9 +7,16 @@ fig4_waypoint       random-waypoint c, lambda vs speed (Fig. 4)
 fig5_speed          accuracy vs device speed, U-shape (Fig. 5)
 vectorized_speedup  scenario engine vs the seed Python-loop paths
 scenario_models     per-model (zeta, tau, h2) generation cost
+jax_scenario_speedup  device-resident (jax) generation vs the NumPy oracle
+
+``--smoke`` (benchmarks.run) keeps the scenario-engine rows (N=512 for
+the jax-vs-numpy differential) and skips the federated-training figure
+sweeps; the smoke rows are the committed-baseline set gated by
+``tools/bench_compare.py`` in CI (BENCH_mobility.json).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -137,6 +144,55 @@ def scenario_models():
     return rows
 
 
-def run():
-    return (fig2_contact() + fig3_intercontact() + fig4_waypoint()
-            + fig5_speed() + vectorized_speedup() + scenario_models())
+def jax_scenario_speedup(smoke: bool = False):
+    """End-to-end schedule generation: jax backend vs the NumPy oracle.
+
+    Times ``ScenarioProvider.from_config(...).schedule()`` — trace,
+    contact extraction, round mapping, and channel gains — through both
+    backends at the same scenario point.  The jax rows are steady-state
+    (the first build compiles; a second provider on a fresh seed reuses
+    the cached program — the seed enters through the PRNG key, not the
+    static model).  ``cells_per_s`` (rounds x N per second) is the gated
+    higher-is-better throughput metric.
+
+    Full mode runs the acceptance point N=1e5, where the oracle RWP's
+    per-device interp loop dominates; smoke (CI) runs N=512.
+    """
+    import jax
+
+    from repro.configs import FLConfig
+    from repro.scenarios import ScenarioProvider
+
+    n, rounds = (512, 60) if smoke else (100_000, 100)
+    rows = []
+    for name in ("rwp", "gauss_markov"):
+        fl = FLConfig(num_devices=n, rounds=rounds, mobility_model=name,
+                      speed=10.0, area=2000.0, seed=0)
+        t0 = time.time()
+        ScenarioProvider.from_config(fl).schedule()
+        np_wall = time.time() - t0
+
+        flj = dataclasses.replace(fl, scenario_backend="jax")
+        jax.block_until_ready(
+            ScenarioProvider.from_config(flj).schedule())  # compile
+        t0 = time.time()
+        jax.block_until_ready(
+            ScenarioProvider.from_config(flj, seed=1).schedule())
+        jx_wall = time.time() - t0
+
+        cells = rounds * n
+        rows.append(csv_row(
+            f"jax_scenario_{name}_n{n}", jx_wall * 1e6,
+            f"cells_per_s={cells / jx_wall:.0f}"
+            f";numpy_wall_s={np_wall:.3f}"
+            f";speedup_vs_numpy={np_wall / jx_wall:.1f}x",
+        ))
+    return rows
+
+
+def run(smoke: bool = False):
+    scenario = (fig4_waypoint() + vectorized_speedup() + scenario_models()
+                + jax_scenario_speedup(smoke=smoke))
+    if smoke:  # CI: scenario-engine rows only, no federated training
+        return scenario
+    return fig2_contact() + fig3_intercontact() + fig5_speed() + scenario

@@ -173,6 +173,18 @@ class FLConfig:
     num_hotspots: int = 4
     hotspot_radius: float = 150.0  # m, RMS excursion around a hotspot
     shadow_corr_dist: float = 25.0  # m, Gudmundson shadowing decorrelation
+    # scenario backend: "numpy" keeps the oracle kinematics; "jax" builds
+    # the whole schedule device-resident (repro/scenarios/jax_kinematics).
+    # Host-side knob — the compiled round consumes the same arrays either way
+    scenario_backend: str = "numpy"
+    # per-client system heterogeneity (repro/scenarios/heterogeneity):
+    # contact windows are gated by a Markov availability chain, an Exp
+    # compute-latency draw, and an i.i.d. dropout coin.  Defaults disable
+    # the layer entirely (no schedule rewrite, no aux masks)
+    het_availability: float = 1.0  # stationary P(client available)
+    het_avail_persist: float = 0.0  # availability chain persistence rho
+    het_compute_mean: float = 0.0  # s, mean Exp local-compute latency
+    het_dropout: float = 0.0  # P(upload lost despite a fitting window)
     # wireless (Table I)
     bandwidth: float = 1e6  # B_n, Hz
     carrier_ghz: float = 3.5

@@ -320,6 +320,9 @@ def run_afl_rounds(step, state, provider, batch_fn, budgets,
         budgets, jnp.float32)
     if telemetry is not None and tstate is None:
         tstate = telemetry.init_state()
+    # heterogeneity loss masks (when the provider carries the layer) fold
+    # into a suite's per-device table alongside each round's metrics
+    aux_round = getattr(provider, "aux_round", lambda r: None)
     history = []
     for r, (zeta, tau, h2) in enumerate(provider):
         if rounds is not None and r >= rounds:
@@ -331,12 +334,32 @@ def run_afl_rounds(step, state, provider, batch_fn, budgets,
         )
         if telemetry is not None:
             state, m, tstate = step(*args, tstate)
+            from repro.telemetry import record_het
+
+            tstate = record_het(telemetry, tstate, aux_round(r))
         else:
             state, m = step(*args)
         history.append(m)
     if telemetry is not None:
         return state, history, tstate
     return state, history
+
+
+def scenario_shardings(mesh: Mesh):
+    """Sharding specs for device-resident scenario arrays on ``mesh``.
+
+    The (rounds, N) schedule tensors (zeta / tau / h2, and the
+    heterogeneity aux masks and (N,) availability state) shard their
+    CLIENT axis over the mesh's ``data`` dimension — every downstream
+    consumer (the pjit step's client-stacked trees, the per-device
+    telemetry rows) is elementwise on that axis, so a client-sharded
+    schedule feeds the step with no resharding collectives.  Returns
+    ``{"schedule": (rounds, N) spec, "state": (N,) spec}``.
+    """
+    return {
+        "schedule": NamedSharding(mesh, P(None, "data")),
+        "state": NamedSharding(mesh, P("data")),
+    }
 
 
 def telemetry_shardings(telemetry, mesh: Mesh):

@@ -26,7 +26,7 @@ from repro.channel import WirelessChannel
 from repro.core import baselines as BL
 from repro.core.afl import afl_init, afl_round
 from repro.scenarios import ScenarioProvider
-from repro.telemetry import AFL_REGISTRY, HIST_KEYS, jit_record
+from repro.telemetry import AFL_REGISTRY, HIST_KEYS, jit_record, record_het
 from repro.utils import get_logger
 
 log = get_logger("repro.runner")
@@ -206,6 +206,8 @@ def run_afl(
             )
             if telemetry is not None:
                 tstate = record(tstate, m, tau_dev)
+                tstate = record_het(telemetry, tstate,
+                                    provider.aux_round(r))
             if tracer is not None:
                 tracer.fence(m)
         tot_uploads += float(jnp.sum(m["success"]))

@@ -36,9 +36,9 @@ def _compiled_vrun(model, cfg, fl, policy, rounds: int, eval_every: int,
     run = make_run_fn(model, cfg, fl, policy, rounds=rounds,
                       eval_every=eval_every, sampler=sampler,
                       telemetry=telemetry)
-    # batched: state0, zeta, tau, h2, budgets, sample_ctx, telemetry state;
-    # shared: eval_batch
-    return jax.jit(jax.vmap(run, in_axes=(0, 0, 0, 0, 0, None, 0, 0)))
+    # batched: state0, zeta, tau, h2, budgets, sample_ctx, telemetry state,
+    # heterogeneity aux masks; shared: eval_batch
+    return jax.jit(jax.vmap(run, in_axes=(0, 0, 0, 0, 0, None, 0, 0, 0)))
 
 
 @lru_cache(maxsize=64)
@@ -106,13 +106,22 @@ def run_seed_batch(
     policy = BL.ALL[policy_name](model.num_params(), fl)
     epolicy = engine_policy(policy)
 
-    scheds = [
-        build_provider(fl, policy_name, None, rounds, int(s)).schedule()
-        for s in seeds
+    providers = [
+        build_provider(fl, policy_name, None, rounds, int(s)) for s in seeds
     ]
-    zeta = jnp.asarray(np.stack([z for z, _, _ in scheds]))
-    tau = jnp.asarray(np.stack([t for _, t, _ in scheds]), jnp.float32)
-    h2 = jnp.asarray(np.stack([h for _, _, h in scheds]), jnp.float32)
+    scheds = [p.schedule() for p in providers]
+    zeta = jnp.asarray(np.stack([np.asarray(z) for z, _, _ in scheds]))
+    tau = jnp.asarray(np.stack([np.asarray(t) for _, t, _ in scheds]),
+                      jnp.float32)
+    h2 = jnp.asarray(np.stack([np.asarray(h) for _, _, h in scheds]),
+                     jnp.float32)
+    # heterogeneity loss masks: (S, rounds, N) per key, {} when disabled
+    # (aux presence is a property of fl, so it is uniform across seeds)
+    het = ({} if providers[0].aux is None else {
+        k: jnp.asarray(np.stack([np.asarray(p.aux[k]) for p in providers]),
+                       jnp.float32)
+        for k in providers[0].aux
+    })
     budgets = jnp.stack([sample_budgets(fl, int(s)) for s in seeds])
 
     efl = engine_fl(fl)
@@ -129,17 +138,17 @@ def run_seed_batch(
 
     mesh = _usable_mesh(mesh, ns)
     if mesh is not None:
-        batched = (state0, zeta, tau, h2, budgets, sample_keys, tstate0)
+        batched = (state0, zeta, tau, h2, budgets, sample_keys, tstate0, het)
         batched = jax.device_put(
             batched, NamedSharding(mesh, P(mesh.axis_names[0]))
         )
-        state0, zeta, tau, h2, budgets, sample_keys, tstate0 = batched
+        state0, zeta, tau, h2, budgets, sample_keys, tstate0, het = batched
         eval_b = jax.device_put(eval_b, NamedSharding(mesh, P()))
 
     vrun = _compiled_vrun(model, cfg, efl, epolicy, rounds, eval_every,
                           shard.traced_batch, telemetry)
     states, hist_dev, tstates = vrun(state0, zeta, tau, h2, budgets, eval_b,
-                                     sample_keys, tstate0)
+                                     sample_keys, tstate0, het)
 
     pts = eval_points(rounds, eval_every)
     hist_np = {k: np.asarray(v) for k, v in hist_dev.items()}  # (S, E)

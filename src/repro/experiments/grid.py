@@ -1,4 +1,4 @@
-"""Declarative experiment grids: policies x mobility models x speeds x seeds.
+"""Declarative experiment grids: policies x mobility x speeds x dropout x seeds.
 
 A paper figure is a grid of AFL runs differing only in scenario knobs and
 the upload policy.  ``ExperimentGrid`` enumerates the cells, derives each
@@ -7,6 +7,12 @@ cell's ``FLConfig``, and groups same-shape cells so the batch engine
 (model, policy-engine-flags) group — e.g. FedAsync and FedMobile differ
 only in the schedule transform, so every cell of both policies runs through
 the same XLA executable.
+
+The ``dropouts`` axis sweeps the heterogeneity layer
+(``scenarios/heterogeneity``): each value becomes ``fl.het_dropout`` for
+the cell, gating contact windows with client dropout.  The default
+``(0.0,)`` keeps the axis collapsed — and cell slugs identical to the
+pre-heterogeneity store keys, so existing result stores resolve unchanged.
 """
 from __future__ import annotations
 
@@ -21,23 +27,29 @@ from repro.core.afl import Policy
 
 @dataclass(frozen=True)
 class GridCell:
-    """One experiment: a (policy, mobility, speed, seed) point."""
+    """One experiment: a (policy, mobility, speed, dropout, seed) point."""
 
     policy: str
     mobility: str
     speed: float
     seed: int
+    dropout: float = 0.0
+
+    def _het_slug(self) -> str:
+        # zero keeps legacy slugs stable (results stores predate the axis)
+        return f"__d{self.dropout:g}" if self.dropout else ""
 
     @property
     def key(self) -> str:
         """Stable slug used by the results store."""
         return (f"{self.policy}__{self.mobility}__v{self.speed:g}"
-                f"__s{self.seed}")
+                f"{self._het_slug()}__s{self.seed}")
 
     @property
     def group_key(self) -> str:
         """Slug of the seed-batched group this cell belongs to."""
-        return f"{self.policy}__{self.mobility}__v{self.speed:g}"
+        return (f"{self.policy}__{self.mobility}__v{self.speed:g}"
+                f"{self._het_slug()}")
 
 
 def engine_policy(policy: Policy) -> Policy:
@@ -53,13 +65,14 @@ def engine_policy(policy: Policy) -> Policy:
 def engine_fl(fl: FLConfig) -> FLConfig:
     """Project an FLConfig onto the fields the compiled round reads.
 
-    Scenario, channel, and energy knobs (mobility_model, speed, area,
-    bandwidth, energy_budget, seed, ...) are consumed host-side — by
-    ``build_provider``, ``sample_budgets``, and the policy/controller
-    constructors — before anything is compiled.  Keying the jit caches on
-    the full config would recompile an identical XLA program for every
-    speed and mobility model of a sweep; this keeps only what
-    ``afl_round``/``afl_init``/``make_run_fn`` actually consume.
+    Scenario, channel, energy, and heterogeneity knobs (mobility_model,
+    speed, area, bandwidth, energy_budget, het_*, scenario_backend, seed,
+    ...) are consumed host-side — by ``build_provider``, ``sample_budgets``,
+    and the policy/controller constructors — before anything is compiled.
+    Keying the jit caches on the full config would recompile an identical
+    XLA program for every speed, mobility model, and dropout level of a
+    sweep; this keeps only what ``afl_round``/``afl_init``/``make_run_fn``
+    actually consume.
     """
     return FLConfig(
         num_devices=fl.num_devices,
@@ -79,6 +92,7 @@ class ExperimentGrid:
     mobility_models: tuple = ("exponential",)
     speeds: tuple = (0.0,)
     seeds: tuple = (0,)
+    dropouts: tuple = (0.0,)  # heterogeneity axis: fl.het_dropout per cell
     rounds: int = 200
     eval_every: int = 20
     base: FLConfig = field(default_factory=FLConfig)
@@ -91,31 +105,33 @@ class ExperimentGrid:
 
     def cells(self) -> list[GridCell]:
         return [
-            GridCell(p, m, float(v), int(s))
-            for p, m, v, s in itertools.product(
-                self.policies, self.mobility_models, self.speeds, self.seeds
+            GridCell(p, m, float(v), int(s), float(d))
+            for p, m, v, d, s in itertools.product(
+                self.policies, self.mobility_models, self.speeds,
+                self.dropouts, self.seeds
             )
         ]
 
-    def groups(self) -> list[tuple[str, str, float, list[GridCell]]]:
-        """Cells bucketed by (policy, mobility, speed) — the seed axis of
-        each bucket is what ``batch.run_seed_batch`` vmaps."""
+    def groups(self) -> list[tuple[str, str, float, float, list[GridCell]]]:
+        """Cells bucketed by (policy, mobility, speed, dropout) — the seed
+        axis of each bucket is what ``batch.run_seed_batch`` vmaps."""
         out = []
-        for p, m, v in itertools.product(
-            self.policies, self.mobility_models, self.speeds
+        for p, m, v, d in itertools.product(
+            self.policies, self.mobility_models, self.speeds, self.dropouts
         ):
-            out.append((p, m, float(v),
-                        [GridCell(p, m, float(v), int(s))
+            out.append((p, m, float(v), float(d),
+                        [GridCell(p, m, float(v), int(s), float(d))
                          for s in self.seeds]))
         return out
 
-    def fl_for(self, mobility: str, speed: float) -> FLConfig:
+    def fl_for(self, mobility: str, speed: float,
+               dropout: float = 0.0) -> FLConfig:
         """The cell's FLConfig: the base config with scenario knobs set."""
         return dataclasses.replace(
             self.base, mobility_model=mobility, speed=float(speed),
-            rounds=self.rounds,
+            het_dropout=float(dropout), rounds=self.rounds,
         )
 
     def size(self) -> int:
         return (len(self.policies) * len(self.mobility_models)
-                * len(self.speeds) * len(self.seeds))
+                * len(self.speeds) * len(self.dropouts) * len(self.seeds))

@@ -79,30 +79,37 @@ class ResultsStore:
     def aggregate(self, grid: ExperimentGrid, metric: str = "eval") -> dict:
         """mean±CI of the final ``metric`` across seeds, per grid group.
 
-        Returns ``{(policy, mobility, speed): (mean, ci, n_seeds)}`` over
-        the groups whose cells are (at least partially) complete.
+        Returns ``{(policy, mobility, speed, dropout): (mean, ci,
+        n_seeds)}`` over the groups whose cells are (at least partially)
+        complete.
         """
         out = {}
-        for policy, mobility, speed, cells in grid.groups():
+        for policy, mobility, speed, dropout, cells in grid.groups():
             finals = [self.load(c)[metric][-1] for c in cells if self.done(c)]
             if finals:
                 m, ci = mean_ci(finals)
-                out[(policy, mobility, speed)] = (m, ci, len(finals))
+                out[(policy, mobility, speed, dropout)] = (m, ci, len(finals))
         return out
 
     def table(self, grid: ExperimentGrid, metric: str = "eval") -> str:
-        """Paper-style comparison table: policy rows x (mobility, speed)
-        columns of final-metric mean±CI."""
+        """Paper-style comparison table: policy rows x (mobility, speed[,
+        dropout]) columns of final-metric mean±CI.  The dropout suffix only
+        appears when the grid actually sweeps the heterogeneity axis."""
         agg = self.aggregate(grid, metric)
-        cols = [(m, v) for m in grid.mobility_models for v in grid.speeds]
+        dropouts = getattr(grid, "dropouts", (0.0,))
+        cols = [(m, v, d) for m in grid.mobility_models
+                for v in grid.speeds for d in dropouts]
         head = f"{'policy':>12s}"
-        for m, v in cols:
-            head += f" {m[:10] + '@v' + format(v, 'g'):>18s}"
+        for m, v, d in cols:
+            label = m[:10] + "@v" + format(v, "g")
+            if len(dropouts) > 1 or d:
+                label += "@d" + format(d, "g")
+            head += f" {label:>18s}"
         lines = [head]
         for p in grid.policies:
             row = f"{p:>12s}"
-            for m, v in cols:
-                cell = agg.get((p, m, float(v)))
+            for m, v, d in cols:
+                cell = agg.get((p, m, float(v), float(d)))
                 row += (f" {cell[0]:>10.4f}±{cell[1]:<6.4f}"
                         if cell else f" {'—':>18s}")
             lines.append(row)

@@ -38,7 +38,7 @@ from repro.core.runner import (
     resolve_telemetry,
     sample_budgets,
 )
-from repro.telemetry import HIST_KEYS, record_round
+from repro.telemetry import HIST_KEYS, record_het, record_round
 from repro.utils import get_logger
 
 log = get_logger("repro.scan_engine")
@@ -130,11 +130,17 @@ def make_run_fn(model, cfg, fl, policy, *, rounds: int, eval_every: int,
     """Pure function running a whole AFL experiment in one trace.
 
     Returns ``run(state0, zeta, tau, h2, budgets, eval_batch, sample_ctx,
-    tstate0) -> (final_state, hist, tstate)`` where ``hist`` maps the loop
-    runner's history keys (except "round") to (num_evals,) arrays.
+    tstate0, het) -> (final_state, hist, tstate)`` where ``hist`` maps the
+    loop runner's history keys (except "round") to (num_evals,) arrays.
     ``sampler(sample_ctx, r)`` yields round r's stacked minibatch:
     ``DataShard.traced_batch`` with a key context, or
     ``_prestacked_sampler`` with a (rounds, ...) tensor.
+
+    ``het`` is the scenario's heterogeneity aux dict — (rounds, N) loss
+    masks from ``ScenarioProvider.aux`` — or ``{}`` when the layer is
+    disabled; it rides the scan inputs and folds into the per-device
+    telemetry table each round (``record_het``).  An empty dict keeps the
+    arity (and the vmap in_axes of ``batch.py``) uniform across runs.
 
     ``telemetry`` (a ``repro.telemetry.MetricRegistry``) threads its
     accumulation pytree ``tstate0`` through the scan carry —
@@ -151,10 +157,10 @@ def make_run_fn(model, cfg, fl, policy, *, rounds: int, eval_every: int,
     bounds = list(zip([0] + pts[:-1], pts))
 
     def run(state0, zeta, tau, h2, budgets, eval_batch, sample_ctx,
-            tstate0):
+            tstate0, het):
         def body(carry, xs):
             state, tot, ts = carry
-            r, zeta_r, tau_r, h2_r = xs
+            r, zeta_r, tau_r, h2_r, het_r = xs
             batch = sampler(sample_ctx, r)
             state, m = afl_round(
                 state, batch, zeta_r, tau_r, h2_r, budgets,
@@ -162,6 +168,7 @@ def make_run_fn(model, cfg, fl, policy, *, rounds: int, eval_every: int,
             )
             if telemetry is not None:
                 ts = record_round(telemetry, ts, m, tau_r)
+                ts = record_het(telemetry, ts, het_r if het_r else None)
             tot = {
                 "uploads": tot["uploads"] + jnp.sum(m["success"]),
                 "k": tot["k"] + jnp.sum(m["k"]),
@@ -180,6 +187,7 @@ def make_run_fn(model, cfg, fl, policy, *, rounds: int, eval_every: int,
             xs = (
                 jnp.arange(start, stop, dtype=jnp.int32),
                 zeta[start:stop], tau[start:stop], h2[start:stop],
+                {k: v[start:stop] for k, v in het.items()},
             )
             (state, tot, ts), _ = jax.lax.scan(body, (state, tot, ts), xs)
             up = jnp.maximum(tot["uploads"], 1.0)
@@ -249,6 +257,9 @@ def run_afl_scanned(
     zeta = jnp.asarray(zeta)
     tau = jnp.asarray(tau, jnp.float32)
     h2 = jnp.asarray(h2, jnp.float32)
+    aux = provider.aux
+    het = ({} if aux is None
+           else {k: jnp.asarray(v, jnp.float32) for k, v in aux.items()})
     budgets = sample_budgets(fl, seed)
 
     if batch_mode == "auto":
@@ -277,7 +288,7 @@ def run_afl_scanned(
     tstate0 = telemetry.init_state() if telemetry is not None else {}
     with span("run"):  # first call per program traces + compiles
         state, hist_dev, tstate = run(state0, zeta, tau, h2, budgets,
-                                      eval_b, sample_ctx, tstate0)
+                                      eval_b, sample_ctx, tstate0, het)
         if tracer is not None:
             tracer.fence(hist_dev)
 

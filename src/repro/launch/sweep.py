@@ -80,13 +80,13 @@ def run_sweep(grid: ExperimentGrid, store: ResultsStore, model, cfg, shard,
     probes = telemetry.probes if isinstance(telemetry, TelemetrySuite) \
         else None
     snapshots = []
-    for policy, mobility, speed, cells in grid.groups():
+    for policy, mobility, speed, dropout, cells in grid.groups():
         todo = store.pending(cells)
         if not todo:
             log.info("group %s: all %d seeds done, skipping",
                      cells[0].group_key, len(cells))
             continue
-        fl = grid.fl_for(mobility, speed)
+        fl = grid.fl_for(mobility, speed, dropout)
         t0 = time.time()
         with span("group", group=cells[0].group_key):
             results = run_seed_batch(
@@ -151,6 +151,13 @@ def main() -> None:
                          "(exponential|rwp|gauss_markov|manhattan|hotspot|static)")
     ap.add_argument("--speeds", default="10",
                     help="comma-separated device speeds (m/s)")
+    ap.add_argument("--dropouts", default="0",
+                    help="comma-separated heterogeneity dropout levels "
+                         "(fl.het_dropout; repro/scenarios/heterogeneity)")
+    ap.add_argument("--scenario-backend", default="numpy",
+                    choices=["numpy", "jax"],
+                    help="scenario engine: numpy oracle kinematics or the "
+                         "device-resident jax port (trace models only)")
     ap.add_argument("--seeds", type=int, default=3,
                     help="seeds per cell (0..seeds-1)")
     ap.add_argument("--rounds", type=int, default=60)
@@ -221,11 +228,13 @@ def main() -> None:
         fixed_k_frac=args.fixed_k_frac, fixed_bits=args.fixed_bits,
         compress_b_min=args.b_range[0], compress_b_max=args.b_range[1],
         per_layer_budget=args.per_layer,
+        scenario_backend=args.scenario_backend,
     )
     grid = ExperimentGrid(
         policies=tuple(args.policies.split(",")),
         mobility_models=tuple(args.mobility.split(",")),
         speeds=tuple(float(v) for v in args.speeds.split(",")),
+        dropouts=tuple(float(d) for d in args.dropouts.split(",")),
         seeds=tuple(range(args.seeds)),
         rounds=args.rounds, eval_every=args.eval_every, base=base,
     )

@@ -97,6 +97,18 @@ def main() -> None:
                     choices=["exponential", "rwp", "gauss_markov", "manhattan",
                              "hotspot", "static"],
                     help="scenario engine mobility model (repro/scenarios)")
+    ap.add_argument("--scenario-backend", default="numpy",
+                    choices=["numpy", "jax"],
+                    help="scenario engine: numpy oracle kinematics or the "
+                         "device-resident jax port (trace models only; "
+                         "repro/scenarios/jax_kinematics)")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="heterogeneity dropout prob (fl.het_dropout)")
+    ap.add_argument("--availability", type=float, default=1.0,
+                    help="heterogeneity: stationary P(client available)")
+    ap.add_argument("--compute-mean", type=float, default=0.0,
+                    help="heterogeneity: mean Exp compute latency (s) "
+                         "subtracted from each contact window")
     ap.add_argument("--area", type=float, default=1000.0, help="m, square side")
     ap.add_argument("--comm-range", type=float, default=100.0)
     ap.add_argument("--contact", type=float, default=4.0)
@@ -144,6 +156,9 @@ def main() -> None:
         mobility_model=args.mobility, area=args.area, comm_range=args.comm_range,
         mean_contact=args.contact, mean_intercontact=args.intercontact,
         lyapunov_v=args.v_weight, seed=args.seed,
+        scenario_backend=args.scenario_backend,
+        het_dropout=args.dropout, het_availability=args.availability,
+        het_compute_mean=args.compute_mean,
         sparsifier="exact" if model.num_params() < 2_000_000 else "sampled",
         telemetry=args.telemetry or args.perdevice or args.probes,
         telemetry_perdevice=args.perdevice,

@@ -1,5 +1,20 @@
 from repro.scenarios.channel import gains_along_trace
 from repro.scenarios.contacts import contact_intervals, rounds_from_trace
+from repro.scenarios.heterogeneity import HeterogeneityModel, gate_windows
+from repro.scenarios.jax_contacts import (
+    contact_intervals_jax,
+    rounds_from_in_range,
+)
+from repro.scenarios.jax_kinematics import (
+    JAX_MODELS,
+    JaxGaussMarkovModel,
+    JaxHotspotClusterModel,
+    JaxManhattanGridModel,
+    JaxRandomWaypointModel,
+    JaxTrace,
+    jax_gains_along_trace,
+    jax_schedule_from_model,
+)
 from repro.scenarios.kinematics import (
     GaussMarkovModel,
     HotspotClusterModel,
@@ -8,7 +23,12 @@ from repro.scenarios.kinematics import (
     RandomWaypointModel,
     Trace,
 )
-from repro.scenarios.provider import MODELS, ScenarioProvider, model_from_config
+from repro.scenarios.provider import (
+    MODELS,
+    ScenarioProvider,
+    jax_model_from_config,
+    model_from_config,
+)
 
 __all__ = [
     "GaussMarkovModel",
@@ -17,10 +37,23 @@ __all__ = [
     "MobilityModel",
     "RandomWaypointModel",
     "Trace",
+    "JAX_MODELS",
+    "JaxGaussMarkovModel",
+    "JaxHotspotClusterModel",
+    "JaxManhattanGridModel",
+    "JaxRandomWaypointModel",
+    "JaxTrace",
+    "HeterogeneityModel",
     "MODELS",
     "ScenarioProvider",
     "model_from_config",
+    "jax_model_from_config",
     "contact_intervals",
+    "contact_intervals_jax",
     "rounds_from_trace",
+    "rounds_from_in_range",
     "gains_along_trace",
+    "jax_gains_along_trace",
+    "jax_schedule_from_model",
+    "gate_windows",
 ]

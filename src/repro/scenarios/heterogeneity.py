@@ -1,0 +1,214 @@
+"""Per-client system heterogeneity: availability, compute latency, dropout.
+
+The FLGo-style ``system_simulator`` layer (and the edge-vehicular AFL
+setting of arxiv 2208.01901) composed with the mobility contact windows:
+a contact only becomes an upload opportunity when the client is
+*available* (a two-state Markov chain), the window that remains after
+local compute is positive (effective window = contact ∩ available, minus
+compute time), and the upload is not lost to a random dropout.  The
+layer is a pure schedule rewrite — (zeta, tau) in, gated (zeta', tau')
+out plus per-round aux masks — so every engine (loop, scan, pjit)
+consumes heterogeneous scenarios without touching its compiled round;
+the aux masks ride the telemetry ``DeviceTable`` as ``unavail`` /
+``dropouts`` counters (``repro.telemetry.record_het``).
+
+Availability chain: per round, an available client stays available with
+probability ``rho + (1 - rho) * pi`` and an unavailable one recovers
+with ``(1 - rho) * pi`` — stationary distribution P(available) = ``pi``
+(= ``availability``) for any persistence ``rho`` (= ``avail_persist``),
+which the unit tests assert empirically.  Compute latency is Exp(mean
+``compute_mean``) per (round, client) — the memoryless stand-in for
+heterogeneous device speeds; dropout is i.i.d. Bernoulli(``dropout``)
+over otherwise-successful uploads.
+
+Both backends share one gating rule (``gate_windows`` — plain arithmetic,
+np or jnp operands): NumPy ``apply`` is the oracle, ``jax_apply`` the
+device-resident twin (statistical parity; exact parity on shared draws).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "HeterogeneityModel",
+    "gate_windows",
+    "jax_apply",
+    "reference_apply",
+]
+
+#: aux-mask keys the telemetry DeviceTable accumulates (record_het)
+HET_COUNTER_KEYS = ("unavail", "dropout")
+
+
+def gate_windows(zeta, tau, avail, latency, drop):
+    """The single gating rule both backends apply to fixed draws.
+
+    zeta/tau: (R, N) contact schedule; avail: (R, N) availability states;
+    latency: (R, N) compute-latency draws (s); drop: (R, N) dropout coin
+    flips.  Returns (zeta', tau', aux) where aux maps ``unavail`` /
+    ``dropout`` to 0/1 masks of contacts lost to that cause (counted
+    first-cause-wins: an unavailable client's window never reaches the
+    dropout coin).  Works elementwise on np or jnp operands — the
+    differential test feeds both the SAME draws and asserts exact
+    equality.
+    """
+    ok = zeta > 0
+    tau_eff = tau - latency
+    fits = tau_eff > 0
+    lost_unavail = ok & ~avail
+    lost_drop = ok & avail & fits & drop
+    good = ok & avail & fits & ~drop
+    zeta_out = good.astype(zeta.dtype if hasattr(zeta, "dtype") else int)
+    tau_out = (tau_eff * good).astype(tau.dtype)
+    aux = {
+        "unavail": lost_unavail.astype(tau.dtype),
+        "dropout": lost_drop.astype(tau.dtype),
+    }
+    return zeta_out, tau_out, aux
+
+
+@dataclasses.dataclass(frozen=True)
+class HeterogeneityModel:
+    """Frozen (hashable) spec of the per-client heterogeneity process."""
+
+    num_devices: int
+    availability: float = 1.0  # stationary P(available); 1 disables
+    avail_persist: float = 0.0  # state persistence rho in [0, 1)
+    compute_mean: float = 0.0  # s, Exp mean compute latency; 0 disables
+    dropout: float = 0.0  # P(upload lost despite a fitting window)
+    seed: int = 0
+
+    @classmethod
+    def from_config(cls, fl, seed: Optional[int] = None):
+        return cls(
+            num_devices=fl.num_devices,
+            availability=fl.het_availability,
+            avail_persist=fl.het_avail_persist,
+            compute_mean=fl.het_compute_mean,
+            dropout=fl.het_dropout,
+            seed=(fl.seed if seed is None else seed),
+        )
+
+    def enabled(self) -> bool:
+        return (self.availability < 1.0 or self.compute_mean > 0.0
+                or self.dropout > 0.0)
+
+    # transition probabilities of the availability chain
+    @property
+    def p_stay_on(self) -> float:
+        return self.avail_persist + (1 - self.avail_persist) * self.availability
+
+    @property
+    def p_recover(self) -> float:
+        return (1 - self.avail_persist) * self.availability
+
+    # -- NumPy oracle --------------------------------------------------------
+
+    def sample_states(self, rounds: int, rng=None) -> np.ndarray:
+        """(rounds, N) bool availability states (stationary start)."""
+        rng = np.random.default_rng(self.seed) if rng is None else rng
+        n = self.num_devices
+        if self.availability >= 1.0:
+            return np.ones((rounds, n), bool)
+        avail = np.empty((rounds, n), bool)
+        cur = rng.random(n) < self.availability  # stationary init
+        for r in range(rounds):  # O(rounds) recurrence on (N,) vectors
+            p = np.where(cur, self.p_stay_on, self.p_recover)
+            cur = rng.random(n) < p
+            avail[r] = cur
+        return avail
+
+    def draws(self, rounds: int, rng=None):
+        """(avail, latency, drop) fixed draws for ``gate_windows``."""
+        rng = np.random.default_rng(self.seed) if rng is None else rng
+        n = self.num_devices
+        avail = self.sample_states(rounds, rng)
+        latency = (rng.exponential(self.compute_mean, (rounds, n))
+                   if self.compute_mean > 0 else np.zeros((rounds, n)))
+        drop = (rng.random((rounds, n)) < self.dropout
+                if self.dropout > 0 else np.zeros((rounds, n), bool))
+        return avail, latency.astype(np.float32), drop
+
+    def apply(self, zeta, tau, rng=None):
+        """Gate a NumPy (zeta, tau) schedule; returns (zeta', tau', aux)."""
+        avail, latency, drop = self.draws(len(zeta), rng)
+        return gate_windows(np.asarray(zeta), np.asarray(tau, np.float32),
+                            avail, latency, drop)
+
+
+# ---------------------------------------------------------------------------
+# JAX twin (device-resident draws + gating, one jitted program)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("model", "rounds"))
+def _jax_draws(model: HeterogeneityModel, key, rounds: int):
+    n = model.num_devices
+    ka, k0, kl, kd = jax.random.split(key, 4)
+    if model.availability >= 1.0:
+        avail = jnp.ones((rounds, n), bool)
+    else:
+        cur0 = jax.random.uniform(k0, (n,)) < model.availability
+
+        def step(cur, k):
+            p = jnp.where(cur, model.p_stay_on, model.p_recover)
+            cur = jax.random.uniform(k, (n,)) < p
+            return cur, cur
+
+        _, avail = jax.lax.scan(step, cur0, jax.random.split(ka, rounds))
+    latency = (model.compute_mean
+               * jax.random.exponential(kl, (rounds, n), jnp.float32)
+               if model.compute_mean > 0
+               else jnp.zeros((rounds, n), jnp.float32))
+    drop = (jax.random.uniform(kd, (rounds, n)) < model.dropout
+            if model.dropout > 0 else jnp.zeros((rounds, n), bool))
+    return avail, latency, drop
+
+
+def jax_apply(model: HeterogeneityModel, zeta, tau, seed=None):
+    """Gate a device-resident (zeta, tau) schedule without leaving the
+    accelerator; returns (zeta', tau', aux) jnp arrays."""
+    key = jax.random.key(model.seed if seed is None else seed)
+    avail, latency, drop = _jax_draws(model, key, int(zeta.shape[0]))
+    return gate_windows(jnp.asarray(zeta), jnp.asarray(tau, jnp.float32),
+                        avail, latency, drop)
+
+
+# ---------------------------------------------------------------------------
+# Pure-Python reference simulator (tests only)
+# ---------------------------------------------------------------------------
+
+
+def reference_apply(zeta, tau, avail, latency, drop):
+    """Per-(round, device) Python-loop restatement of ``gate_windows`` —
+    the independent reference the heterogeneity unit tests compare the
+    vectorized gating against (contact ∩ available, minus compute time,
+    then the dropout coin)."""
+    zeta = np.asarray(zeta)
+    tau = np.asarray(tau, np.float32)
+    rounds, n = zeta.shape
+    z_out = np.zeros_like(zeta)
+    t_out = np.zeros_like(tau)
+    aux = {k: np.zeros((rounds, n), np.float32) for k in HET_COUNTER_KEYS}
+    for r in range(rounds):
+        for i in range(n):
+            if not zeta[r, i]:
+                continue
+            if not avail[r, i]:
+                aux["unavail"][r, i] = 1.0
+                continue
+            window = tau[r, i] - latency[r, i]
+            if window <= 0:
+                continue  # compute ate the whole contact window
+            if drop[r, i]:
+                aux["dropout"][r, i] = 1.0
+                continue
+            z_out[r, i] = 1
+            t_out[r, i] = window
+    return z_out, t_out, aux

@@ -1,0 +1,136 @@
+"""JAX contact extraction: in-range runs -> intervals -> per-round (zeta, tau).
+
+The device-resident port of ``scenarios/contacts.py`` +
+``mobility.contact.intervals_to_rounds``.  On the SAME (steps, N) in-range
+matrix it is exactly equal to the NumPy pair — same first-writer-wins
+round claiming, same tau semantics (full contact duration at the
+contact-start round, remaining duration from the round boundary in
+continuation rounds), same end-of-trace censoring — which is what the
+differential harness (tests/test_jax_scenarios.py) pins down cell by
+cell.  The kinematic *inputs* differ across backends (independent PRNGs),
+so end-to-end schedules agree statistically, not bitwise.
+
+The extraction is scatter-free and shape-static, built from three
+O(steps x N) prefix scans:
+
+* ``start_idx[t]`` — running cummax of start-flag positions: the start
+  step of the contact run covering t;
+* ``end_idx[t]``   — reversed cummin of out-of-range positions: the
+  first out-of-range step at/after t (``steps`` when the run reaches the
+  trace end — the censored/truncated case);
+* ``nxt[t]``       — reversed cummin of in-range positions: the first
+  in-range step at/after t.
+
+A round r spans step indices [t_lo, t_hi]; the earliest interval
+overlapping it is the run of ``nxt[t_lo]``, and one gather per (round,
+device) cell yields zeta/tau.  ``drop_truncated`` masks cells claimed by
+a run still open at the trace end — the same window-bias fix PR 1 gave
+``measure_contact_stats`` (truncated contacts bias mean contact time low
+and contact rate high; at trace horizons ~ tens of mean contact times
+the bias is visible in CI-band tests).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["contact_intervals_jax", "rounds_from_in_range", "run_bounds"]
+
+
+def run_bounds(in_range):
+    """(start_idx, end_idx, nxt) prefix-scan tables for a (steps, N) bool
+    in-range matrix; see the module docstring for their semantics.
+    Valid wherever they are gathered below; ``steps`` is the sentinel."""
+    steps = in_range.shape[0]
+    ir = in_range
+    idx = jnp.arange(steps, dtype=jnp.int32)[:, None]
+    prev = jnp.pad(ir[:-1], ((1, 0), (0, 0)))
+    start_flag = ir & ~prev
+    start_idx = jax.lax.cummax(jnp.where(start_flag, idx, -1), axis=0)
+    rev = lambda x: jnp.flip(jax.lax.cummin(jnp.flip(x, 0), axis=0), 0)
+    end_idx = rev(jnp.where(~ir, idx, steps))
+    nxt = rev(jnp.where(ir, idx, steps))
+    return start_idx, end_idx, nxt
+
+
+def contact_intervals_jax(in_range, dt: float, size=None):
+    """Flat (dev, start, dur) contact intervals — device-resident twin of
+    ``scenarios.contacts.contact_intervals``, same device-then-time order.
+
+    Contacts still open at the trace end are censored at the window,
+    exactly like the oracle.  Without ``size`` the call is host-synced
+    (dynamic result count — fine for tests/notebooks); pass a static
+    ``size`` to keep it jittable, and the result is padded with -1 device
+    ids beyond the true interval count.
+    """
+    ir = jnp.asarray(in_range, bool)
+    steps, n = ir.shape
+    _, end_idx, _ = run_bounds(ir)
+    prev = jnp.pad(ir[:-1], ((1, 0), (0, 0)))
+    start_flag = (ir & ~prev).T.reshape(-1)  # (n*steps): device-major
+    flat = jnp.nonzero(start_flag, size=size, fill_value=-1)[0] \
+        if size is not None else jnp.nonzero(start_flag)[0]
+    dev = flat // steps
+    t = flat % steps
+    ok = flat >= 0
+    e = end_idx[t, jnp.clip(dev, 0)]
+    return (jnp.where(ok, dev, -1),
+            jnp.where(ok, t, 0).astype(jnp.float32) * dt,
+            jnp.where(ok, (e - t).astype(jnp.float32) * dt, 0.0))
+
+
+@partial(jax.jit, static_argnames=("dt", "rounds", "delta",
+                                   "drop_truncated"))
+def rounds_from_in_range(in_range, dt: float, rounds: int, delta: float,
+                         drop_truncated: bool = False):
+    """(zeta, tau) per round from a (steps, N) in-range matrix, exactly
+    matching ``contact_intervals`` + ``intervals_to_rounds`` cell-wise.
+
+    Returns ((rounds, N) int32, (rounds, N) float32).  ``drop_truncated``
+    zeroes every cell claimed by a contact still open at the trace end —
+    the extractor-level mirror of ``measure_contact_stats``'s
+    ``drop_truncated`` (a censored contact's tau under-states the real
+    window; biased cells poison contact-time statistics at short
+    horizons).  The oracle pair has no such switch: the regression test
+    drops trailing intervals host-side to cross-check.
+    """
+    ir = jnp.asarray(in_range, bool)
+    steps, n = ir.shape
+    start_idx, end_idx, nxt = run_bounds(ir)
+
+    # static per-round step windows: round r covers [t_lo, t_hi].  A run
+    # [S, E) overlaps round r iff S <= t_hi and E - 1 >= t_lo, and two
+    # intersecting contiguous index ranges always share a step, so the
+    # earliest overlapping run is the run of the first in-range step in
+    # the window: nxt[t_lo].
+    r = np.arange(rounds)
+    t_lo = np.floor(r * delta / dt).astype(np.int64)
+    t_hi = np.minimum(np.ceil((r + 1) * delta / dt).astype(np.int64) - 1,
+                      steps - 1)
+    in_window = t_lo < steps  # horizon guard (non-integer delta/dt grids)
+    t_lo = np.minimum(t_lo, steps - 1)
+
+    tstar = nxt[t_lo]  # (rounds, n): first in-range step in the window
+    valid = (tstar <= jnp.asarray(t_hi)[:, None]) \
+        & jnp.asarray(in_window)[:, None]
+    tc = jnp.clip(tstar, 0, steps - 1)
+    gidx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None],
+                            tc.shape)
+    s_idx = start_idx[tc, gidx]
+    e_idx = end_idx[tc, gidx]
+    truncated = e_idx == steps  # run reaches the trace end (censored)
+
+    s = s_idx.astype(jnp.float32) * dt
+    e = e_idx.astype(jnp.float32) * dt
+    r0 = jnp.floor(s / delta).astype(jnp.int32)
+    rr = jnp.arange(rounds, dtype=jnp.int32)[:, None]
+    tau_cand = jnp.where(r0 == rr, e - s, e - rr.astype(jnp.float32) * delta)
+
+    if drop_truncated:
+        valid = valid & ~truncated
+    zeta = valid.astype(jnp.int32)
+    tau = jnp.where(valid, tau_cand, 0.0).astype(jnp.float32)
+    return zeta, tau

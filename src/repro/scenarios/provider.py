@@ -20,6 +20,7 @@ import numpy as np
 from repro.channel.wireless import WirelessChannel
 from repro.mobility.contact import ContactProcess
 from repro.scenarios.contacts import rounds_from_trace
+from repro.scenarios.heterogeneity import HeterogeneityModel
 from repro.scenarios.kinematics import (
     GaussMarkovModel,
     HotspotClusterModel,
@@ -74,16 +75,60 @@ def model_from_config(fl, seed: Optional[int] = None) -> MobilityModel:
                    f"exponential, static, {sorted(MODELS)}")
 
 
+def jax_model_from_config(fl, seed: Optional[int] = None):
+    """The device-resident twin of ``model_from_config`` (jax_kinematics).
+
+    Same FLConfig fields, same speed sentinel; returns a frozen (hashable)
+    JAX model usable as a jit static arg.
+    """
+    from repro.scenarios.jax_kinematics import (
+        JaxGaussMarkovModel,
+        JaxHotspotClusterModel,
+        JaxManhattanGridModel,
+        JaxRandomWaypointModel,
+    )
+
+    seed = fl.seed if seed is None else seed
+    name = fl.mobility_model
+    speed = fl.speed if fl.speed > 0 else 10.0
+    common = dict(num_devices=fl.num_devices, area=fl.area, mean_speed=speed,
+                  seed=seed)
+    if name == "rwp":
+        return JaxRandomWaypointModel(pause_max=fl.pause_max, **common)
+    if name == "gauss_markov":
+        return JaxGaussMarkovModel(corr_dist=fl.gm_corr_dist, **common)
+    if name == "manhattan":
+        return JaxManhattanGridModel(block=fl.street_block, **common)
+    if name in ("hotspot", "static"):
+        if name == "static":
+            common["mean_speed"] = 0.0
+        return JaxHotspotClusterModel(
+            num_hotspots=fl.num_hotspots, hotspot_radius=fl.hotspot_radius,
+            **common,
+        )
+    raise KeyError(f"unknown mobility model {name!r} for the jax backend; "
+                   f"known: static, {sorted(MODELS)}")
+
+
 class ScenarioProvider:
-    """Streams per-round (zeta, tau, h2); precomputes the schedule lazily."""
+    """Streams per-round (zeta, tau, h2); precomputes the schedule lazily.
+
+    With a ``HeterogeneityModel`` attached (``fl.het_*`` knobs), the built
+    schedule is gated once — effective window = contact ∩ available, minus
+    compute time, minus dropout — and the per-round loss masks are exposed
+    as ``aux`` / ``aux_round`` for the telemetry ``DeviceTable``.
+    """
 
     def __init__(self, rounds: int, num_devices: int,
                  build: Optional[Callable[[], Schedule]] = None,
-                 schedule: Optional[Schedule] = None):
+                 schedule: Optional[Schedule] = None,
+                 het: Optional[HeterogeneityModel] = None):
         self.rounds = rounds
         self.num_devices = num_devices
         self._build = build
         self._schedule = schedule
+        self._het = het if (het is not None and het.enabled()) else None
+        self._aux = None
 
     # -- constructors -------------------------------------------------------
 
@@ -100,6 +145,31 @@ class ScenarioProvider:
         rounds = fl.rounds if rounds is None else rounds
         seed = fl.seed if seed is None else seed
         chan = _channel_from_config(fl, seed + 1)
+        het = HeterogeneityModel.from_config(fl, seed + 2)
+
+        backend = getattr(fl, "scenario_backend", "numpy")
+        if backend not in ("numpy", "jax"):
+            raise KeyError(f"unknown scenario backend {backend!r}; "
+                           "known: numpy, jax")
+        # the renewal abstraction has no kinematics to port: it always
+        # builds host-side (already O(rounds x N) vectorized)
+        if backend == "jax" and fl.mobility_model != "exponential":
+            from repro.scenarios.jax_kinematics import jax_schedule_from_model
+
+            # the frozen model is a jit static arg: keep its seed field
+            # canonical and feed the actual seed through the PRNG key, so
+            # every seed of a sweep reuses ONE compiled scenario program
+            model = jax_model_from_config(fl, 0)
+
+            def build() -> Schedule:
+                return jax_schedule_from_model(
+                    model, rounds, fl.round_duration, dt=fl.mobility_dt,
+                    comm_range=fl.comm_range,
+                    shadow_corr_dist=fl.shadow_corr_dist,
+                    carrier_ghz=fl.carrier_ghz, seed=seed,
+                )
+
+            return cls(rounds, fl.num_devices, build=build, het=het)
 
         if fl.mobility_model == "exponential":
             def build() -> Schedule:
@@ -130,7 +200,7 @@ class ScenarioProvider:
                 )
                 return zeta, tau, h2.astype(np.float32)
 
-        return cls(rounds, fl.num_devices, build=build)
+        return cls(rounds, fl.num_devices, build=build, het=het)
 
     @classmethod
     def from_arrays(cls, zeta: np.ndarray, tau: np.ndarray,
@@ -181,8 +251,28 @@ class ScenarioProvider:
     def schedule(self) -> Schedule:
         """The full (zeta, tau, h2) arrays, each (rounds, num_devices)."""
         if self._schedule is None:
-            self._schedule = self._build()
+            zeta, tau, h2 = self._build()
+            if self._het is not None:
+                if isinstance(zeta, np.ndarray):
+                    zeta, tau, self._aux = self._het.apply(zeta, tau)
+                else:  # device-resident schedule: gate without leaving device
+                    from repro.scenarios.heterogeneity import jax_apply
+
+                    zeta, tau, self._aux = jax_apply(self._het, zeta, tau)
+            self._schedule = (zeta, tau, h2)
         return self._schedule
+
+    @property
+    def aux(self):
+        """Heterogeneity loss masks {"unavail", "dropout"}, each
+        (rounds, N), or None when the layer is disabled."""
+        self.schedule()
+        return self._aux
+
+    def aux_round(self, r: int):
+        """Round r's slice of ``aux`` (None when disabled)."""
+        aux = self.aux
+        return None if aux is None else {k: v[r] for k, v in aux.items()}
 
     def round(self, r: int) -> Schedule:
         """(zeta_r, tau_r, h2_r) for round r, each (num_devices,)."""

@@ -40,6 +40,7 @@ from repro.telemetry.metrics import (
     afl_registry,
     jit_record,
     merge_fetched,
+    record_het,
     record_round,
     to_jsonable,
 )
@@ -83,6 +84,7 @@ __all__ = [
     "participation_gini",
     "probes_to_jsonable",
     "read_jsonl",
+    "record_het",
     "record_round",
     "render_report",
     "report_from_config",

@@ -454,6 +454,24 @@ def record_round(registry, state: dict, metrics: dict, tau) -> dict:
     )
 
 
+def record_het(telemetry, state: dict, het) -> dict:
+    """Fold one round's heterogeneity loss masks into a telemetry state.
+
+    ``het`` is a ``ScenarioProvider.aux_round`` dict — (N,) masks under
+    "unavail" / "dropout" — or None.  Only a :class:`TelemetrySuite`
+    carrying a per-device table has anywhere to put per-client loss
+    counters, so everything else (plain registries, suites without a
+    table, het=None) is an identity — which keeps every engine call site
+    unconditional.
+    """
+    if (het is None or not isinstance(telemetry, TelemetrySuite)
+            or telemetry.device is None):
+        return state
+    new = dict(state)
+    new["device"] = telemetry.device.update_het(state["device"], het)
+    return new
+
+
 @lru_cache(maxsize=8)
 def jit_record(registry: MetricRegistry):
     """Jitted ``record_round`` for the per-round loop engine (one compile

@@ -51,6 +51,12 @@ FIELD_KIND = {
     "bits_sum": "sum",
     "energy_sum": "sum",
     "e_norm2": "max",
+    # heterogeneity loss counters (scenarios/heterogeneity): contacts a
+    # client lost to unavailability or a dropout.  Zero unless the scenario
+    # carries a HeterogeneityModel; folded in by ``update_het``, NOT by
+    # ``update`` (the engine metric dicts never contain them)
+    "unavail": "sum",
+    "dropouts": "sum",
 }
 
 #: per-device (N,) fields, in state order; "rounds" is the extra scalar
@@ -112,6 +118,25 @@ class DeviceTable:
             jnp.asarray(e2, jnp.float32) if e2 is not None
             else state["e_norm2"]
         )
+        # het counters ride through unchanged: update_het owns them
+        new["unavail"] = state["unavail"]
+        new["dropouts"] = state["dropouts"]
+        return new
+
+    def update_het(self, state: dict, het: Optional[Mapping]) -> dict:
+        """Fold one round's heterogeneity loss masks into the table.
+
+        ``het`` is a ``ScenarioProvider.aux_round`` dict — (N,) 0/1 masks
+        under "unavail" / "dropout" — or None (layer disabled: no-op).
+        Elementwise per client, same collective-free property as ``update``.
+        """
+        if het is None:
+            return state
+        new = dict(state)
+        new["unavail"] = state["unavail"] \
+            + jnp.asarray(het["unavail"], jnp.float32)
+        new["dropouts"] = state["dropouts"] \
+            + jnp.asarray(het["dropout"], jnp.float32)
         return new
 
     # -- merge ---------------------------------------------------------------
@@ -163,6 +188,10 @@ class DeviceTable:
 def rows(snapshot: dict) -> list[dict]:
     """Fetched table -> one record per device, with derived stats."""
     n = len(np.asarray(snapshot["contacts"]))
+    # het counters: absent from snapshots fetched before the heterogeneity
+    # layer existed (archived telemetry.jsonl)
+    unavail = np.asarray(snapshot.get("unavail", np.zeros(n)))
+    dropouts = np.asarray(snapshot.get("dropouts", np.zeros(n)))
     out = []
     for i in range(n):
         contacts = float(np.asarray(snapshot["contacts"])[i])
@@ -183,6 +212,8 @@ def rows(snapshot: dict) -> list[dict]:
             "bits_sum": float(np.asarray(snapshot["bits_sum"])[i]),
             "energy_sum": float(np.asarray(snapshot["energy_sum"])[i]),
             "e_norm2": float(np.asarray(snapshot["e_norm2"])[i]),
+            "unavail": float(unavail[i]),
+            "dropouts": float(dropouts[i]),
         }
         out.append(rec)
     return out

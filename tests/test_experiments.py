@@ -129,9 +129,12 @@ def test_grid_cells_groups_and_engine_key():
     assert grid.size() == 3 * 2 * 3 == len(grid.cells())
     groups = grid.groups()
     assert len(groups) == 6
-    for policy, mobility, speed, cells in groups:
+    for policy, mobility, speed, dropout, cells in groups:
         assert [c.seed for c in cells] == [0, 1, 2]
         assert all(c.policy == policy and c.speed == speed for c in cells)
+        assert dropout == 0.0  # default heterogeneity axis is collapsed
+    # legacy store keys are unchanged while the dropout axis is collapsed
+    assert groups[0][4][0].key.count("__d") == 0
     fl = grid.fl_for("rwp", 20.0)
     assert fl.mobility_model == "rwp" and fl.speed == 20.0
     # FedAsync and FedMobile share engine flags -> one compiled program
@@ -159,7 +162,7 @@ def test_results_store_resume(tmp_path):
     assert store.pending(cells) == [cells[1]]
     assert store.load(cells[0])["eval"] == [0.5, 0.7]
     agg = store.aggregate(grid)
-    m, ci, n = agg[("mads", "exponential", 5.0)]
+    m, ci, n = agg[("mads", "exponential", 5.0, 0.0)]
     assert m == pytest.approx(0.7) and n == 1
     assert "mads" in store.table(grid)
     # jsonl index got one line

@@ -1,0 +1,664 @@
+"""Differential harness: JAX scenario engine vs the NumPy oracle.
+
+Layered like the pipeline itself:
+
+* kinematics  — statistical parity only (independent PRNG streams):
+  bounds/speed/grid/dwell properties, inverse-speed contact law, and
+  CI-band agreement of contact statistics with the oracle models;
+* extraction  — exact parity: on a SHARED (steps, N) in-range matrix,
+  ``contact_intervals_jax`` reproduces ``contact_intervals`` and
+  ``rounds_from_in_range`` reproduces ``intervals_to_rounds`` cell by
+  cell (bit-equal on integer step grids);
+* theory      — contact rate / staleness from the JAX extractor on an
+  exponential renewal mask land inside CI bands of the closed forms in
+  ``core/theory.py``;
+* heterogeneity — availability/latency/dropout gating vs the pure-Python
+  reference, Markov stationarity, and the DeviceTable loss counters.
+
+Property tests run twice where hypothesis is available: a deterministic
+parametrized sweep always runs (CI has no hard hypothesis dependency),
+and a ``@given`` fuzzing twin activates when the package is installed.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FLConfig
+from repro.mobility.contact import intervals_to_rounds
+from repro.mobility.waypoint import measure_contact_stats
+from repro.scenarios import (
+    JAX_MODELS,
+    GaussMarkovModel,
+    HeterogeneityModel,
+    HotspotClusterModel,
+    JaxGaussMarkovModel,
+    JaxHotspotClusterModel,
+    JaxManhattanGridModel,
+    JaxRandomWaypointModel,
+    ManhattanGridModel,
+    RandomWaypointModel,
+    ScenarioProvider,
+    contact_intervals,
+    contact_intervals_jax,
+    gate_windows,
+    jax_schedule_from_model,
+    rounds_from_in_range,
+)
+from repro.scenarios.heterogeneity import reference_apply
+from repro.scenarios.jax_kinematics import _reflect
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dep: the parametrized twins still run
+    HAVE_HYPOTHESIS = False
+
+JAX_MODEL_CASES = [
+    (JaxRandomWaypointModel, dict(pause_max=2.0)),
+    (JaxGaussMarkovModel, {}),
+    (JaxManhattanGridModel, {}),
+    (JaxHotspotClusterModel, dict(hotspot_radius=250.0)),
+]
+_ids = lambda x: getattr(x, "__name__", "")
+
+
+def random_masks(seed: int, steps: int, n: int, densities=(0.05, 0.3, 0.7)):
+    """Correlated random in-range matrices (runs, not salt-and-pepper)."""
+    rng = np.random.default_rng(seed)
+    for p in densities:
+        # threshold a random walk: produces contact runs of varied length
+        walk = np.cumsum(rng.normal(0, 1, (steps, n)), axis=0)
+        walk -= walk.mean(0)
+        yield walk < np.quantile(walk, p, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# kinematics: shape / bound / structure properties (deterministic sweep)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cls,extra", JAX_MODEL_CASES, ids=_ids)
+def test_jax_trace_shapes_and_bounds(cls, extra):
+    m = cls(num_devices=6, area=500.0, mean_speed=8.0, seed=3, **extra)
+    tr = m.trace(200.0, 1.0)
+    assert tr.pos.shape == (200, 6, 2)
+    assert tr.mes.shape == (200, 2)
+    pos = np.asarray(tr.pos)
+    assert np.isfinite(pos).all()
+    assert pos.min() >= -1e-3 and pos.max() <= 500.0 + 1e-3
+    assert np.asarray(tr.in_range(100.0)).dtype == bool
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_jax_rwp_speed_bounds(seed):
+    """Per-leg speeds are U(0.5v, 1.5v): no step may exceed 1.5 v dt."""
+    v = 12.0
+    m = JaxRandomWaypointModel(num_devices=16, area=400.0, mean_speed=v,
+                               pause_max=3.0, seed=seed)
+    pos = np.asarray(m.trace(300.0, 1.0).pos)
+    step = np.linalg.norm(np.diff(pos, axis=0), axis=-1)
+    assert step.max() <= 1.5 * v + 1e-3
+
+
+def test_jax_manhattan_grid_snap_and_speed():
+    m = JaxManhattanGridModel(num_devices=8, area=600.0, mean_speed=10.0,
+                              block=100.0, seed=5)
+    pos = np.asarray(m.trace(500.0, 1.0).pos)
+    # at any instant one coordinate sits on a grid line (multiple of block)
+    frac = np.abs(pos / 100.0 - np.round(pos / 100.0))
+    assert (frac.min(axis=-1) < 1e-3).all()
+    step = np.linalg.norm(np.diff(pos, axis=0), axis=-1)
+    assert step.max() <= 1.5 * 10.0 + 1e-3
+
+
+def test_jax_hotspot_static_at_zero_speed():
+    m = JaxHotspotClusterModel(num_devices=5, mean_speed=0.0, seed=2)
+    pos = np.asarray(m.trace(50.0, 1.0).pos)
+    assert np.all(pos == pos[0])
+
+
+def test_jax_hotspot_dwell():
+    """Devices orbit their anchor: excursions stay O(radius), far below the
+    area scale, and the time-averaged position is near the anchor."""
+    radius = 100.0
+    m = JaxHotspotClusterModel(num_devices=24, area=2000.0, mean_speed=5.0,
+                               num_hotspots=3, hotspot_radius=radius, seed=7)
+    pos = np.asarray(m.trace(800.0, 1.0).pos)  # (steps, n, 2)
+    center = pos.mean(axis=0)  # per-device dwell point ~ anchor
+    excur = np.linalg.norm(pos - center[None], axis=-1)
+    assert np.quantile(excur, 0.95) < 5 * radius  # OU keeps devices close
+    assert excur.max() < 0.5 * 2000.0  # never wanders across the area
+
+
+def test_reflect_bounds_parametrized():
+    x = np.linspace(-3000.0, 3000.0, 4001, dtype=np.float32)
+    y = np.asarray(_reflect(jnp.asarray(x), 500.0))
+    assert (y >= 0).all() and (y <= 500.0).all()
+    # in-domain points are fixed points of the fold
+    inside = (x >= 0) & (x <= 500.0)
+    np.testing.assert_allclose(y[inside], x[inside], atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# kinematics: hypothesis fuzzing twins (skipped when not installed)
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(x=st.floats(-1e6, 1e6), hi=st.floats(1.0, 1e4))
+    @settings(max_examples=200, deadline=None)
+    def test_reflect_bounds_hypothesis(x, hi):
+        y = float(_reflect(jnp.float32(x), float(hi)))
+        assert -1e-2 <= y <= hi + 1e-2
+
+    @given(seed=st.integers(0, 2**31 - 1), v=st.floats(0.5, 40.0),
+           area=st.floats(100.0, 2000.0))
+    @settings(max_examples=10, deadline=None)
+    def test_rwp_trace_bounds_hypothesis(seed, v, area):
+        m = JaxRandomWaypointModel(num_devices=4, area=area, mean_speed=v,
+                                   seed=seed)
+        pos = np.asarray(m.trace(100.0, 1.0).pos)
+        assert pos.min() >= -1e-2 and pos.max() <= area + 1e-2
+        step = np.linalg.norm(np.diff(pos, axis=0), axis=-1)
+        assert step.max() <= 1.5 * v + 1e-2
+
+    @given(seed=st.integers(0, 2**31 - 1),
+           block=st.sampled_from([50.0, 100.0, 150.0]))
+    @settings(max_examples=10, deadline=None)
+    def test_manhattan_snap_hypothesis(seed, block):
+        m = JaxManhattanGridModel(num_devices=4, area=600.0, mean_speed=10.0,
+                                  block=block, seed=seed)
+        pos = np.asarray(m.trace(120.0, 1.0).pos)
+        frac = np.abs(pos / block - np.round(pos / block))
+        assert (frac.min(axis=-1) < 1e-3).all()
+
+
+# ---------------------------------------------------------------------------
+# kinematics: statistical parity with the NumPy oracle
+# ---------------------------------------------------------------------------
+
+
+ORACLE_OF = {
+    JaxRandomWaypointModel: RandomWaypointModel,
+    JaxGaussMarkovModel: GaussMarkovModel,
+    JaxManhattanGridModel: ManhattanGridModel,
+    JaxHotspotClusterModel: HotspotClusterModel,
+}
+
+
+@pytest.mark.parametrize("cls,extra", JAX_MODEL_CASES, ids=_ids)
+def test_jax_contact_stats_match_oracle(cls, extra):
+    """Independent PRNGs: mean contact / intercontact agree within a 2x
+    band per model (the same tolerance class as the oracle's own
+    vectorized-vs-seed-loop test)."""
+    kw = dict(num_devices=40, area=600.0, mean_speed=9.0, **extra)
+    jm = cls(seed=11, **kw)
+    om = ORACLE_OF[cls](seed=12, **{k: v for k, v in kw.items()})
+    c_j, g_j = measure_contact_stats(
+        np.asarray(jm.trace(3000.0, 1.0).in_range(100.0)))
+    c_o, g_o = measure_contact_stats(om.trace(3000.0, 1.0).in_range(100.0))
+    assert c_j > 0 and np.isfinite(g_j)
+    assert 0.5 < c_j / c_o < 2.0, (c_j, c_o)
+    assert 0.5 < g_j / g_o < 2.0, (g_j, g_o)
+
+
+def test_jax_inverse_speed_law_large_n():
+    """Corollary 1's c ~ C/v, lam ~ L/v on the JAX path at N=1e4: the
+    fleet-sized trace gives tight contact statistics from a short horizon."""
+    stats = []
+    for v, seed in ((3.0, 7), (12.0, 8)):
+        m = JaxGaussMarkovModel(num_devices=10_000, area=600.0, mean_speed=v,
+                                seed=seed)
+        ir = np.asarray(m.trace(2000.0, 1.0).in_range(100.0))
+        stats.append(measure_contact_stats(ir))
+    (c_slow, g_slow), (c_fast, g_fast) = stats
+    assert c_fast > 0 and np.isfinite(g_fast)
+    # speeds differ 4x; N=1e4 shrinks the CI, so a tighter band than the
+    # oracle's N=48 test is safe
+    assert 2.6 < c_slow / c_fast < 6.1, (c_slow, c_fast)
+    assert 2.6 < g_slow / g_fast < 6.1, (g_slow, g_fast)
+
+
+# ---------------------------------------------------------------------------
+# extraction: exact parity on shared in-range matrices
+# ---------------------------------------------------------------------------
+
+
+def test_intervals_exact_on_shared_masks():
+    for mask in random_masks(0, steps=400, n=17):
+        dev_o, start_o, dur_o = contact_intervals(mask, dt=2.0)
+        dev_j, start_j, dur_j = contact_intervals_jax(mask, dt=2.0)
+        np.testing.assert_array_equal(np.asarray(dev_j), dev_o)
+        np.testing.assert_array_equal(np.asarray(start_j), start_o)
+        np.testing.assert_array_equal(np.asarray(dur_j), dur_o)
+
+
+def test_intervals_static_size_padding():
+    mask = next(iter(random_masks(1, steps=200, n=5, densities=(0.3,))))
+    dev_o, start_o, dur_o = contact_intervals(mask, dt=1.0)
+    k = len(dev_o)
+    dev_j, start_j, dur_j = contact_intervals_jax(mask, dt=1.0, size=k + 7)
+    assert dev_j.shape == (k + 7,)
+    np.testing.assert_array_equal(np.asarray(dev_j[:k]), dev_o)
+    np.testing.assert_array_equal(np.asarray(start_j[:k]), start_o)
+    np.testing.assert_array_equal(np.asarray(dur_j[:k]), dur_o)
+    assert (np.asarray(dev_j[k:]) == -1).all()
+    assert (np.asarray(dur_j[k:]) == 0).all()
+
+
+def _oracle_rounds(mask, dt, rounds, delta, drop_truncated=False):
+    dev, start, dur = contact_intervals(mask, dt=dt)
+    if drop_truncated:
+        steps = mask.shape[0]
+        keep = start + dur < steps * dt - 1e-9  # run ends before the horizon
+        dev, start, dur = dev[keep], start[keep], dur[keep]
+    return intervals_to_rounds(dev, start, dur, mask.shape[1], rounds, delta)
+
+
+def test_rounds_exact_on_integer_grid():
+    """dt=1, delta=10: every boundary is an exact f32 integer, so the JAX
+    extractor must be bit-equal to the interval oracle, cell by cell."""
+    for mask in random_masks(2, steps=400, n=13):
+        z_o, t_o = _oracle_rounds(mask, 1.0, 40, 10.0)
+        z_j, t_j = rounds_from_in_range(mask, 1.0, 40, 10.0)
+        np.testing.assert_array_equal(np.asarray(z_j), z_o)
+        np.testing.assert_array_equal(np.asarray(t_j), t_o)
+
+
+def test_rounds_on_noninteger_grid():
+    """Fractional delta/dt ratio: zeta stays exact (same overlap logic),
+    tau matches to f32 arithmetic tolerance."""
+    dt, delta, rounds = 0.5, 3.3, 55
+    for mask in random_masks(3, steps=380, n=9):
+        z_o, t_o = _oracle_rounds(mask, dt, rounds, delta)
+        z_j, t_j = rounds_from_in_range(mask, dt, rounds, delta)
+        np.testing.assert_array_equal(np.asarray(z_j), z_o)
+        np.testing.assert_allclose(np.asarray(t_j), t_o, atol=1e-3)
+
+
+@pytest.mark.parametrize("cls,extra", JAX_MODEL_CASES, ids=_ids)
+def test_rounds_exact_on_real_jax_traces(cls, extra):
+    """The headline differential: a real JAX trace's in-range matrix pushed
+    through both extractors gives identical (zeta, tau) schedules."""
+    m = cls(num_devices=24, area=500.0, mean_speed=10.0, seed=9, **extra)
+    mask = np.asarray(m.trace(600.0, 1.0).in_range(100.0))
+    z_o, t_o = _oracle_rounds(mask, 1.0, 60, 10.0)
+    z_j, t_j = rounds_from_in_range(mask, 1.0, 60, 10.0)
+    np.testing.assert_array_equal(np.asarray(z_j), z_o)
+    np.testing.assert_array_equal(np.asarray(t_j), t_o)
+    assert z_o.sum() > 0, "degenerate scenario: no contacts to compare"
+
+
+def test_drop_truncated_regression():
+    """The PR-1 window-bias fix, mirrored at the extractor level: contacts
+    still open at the trace end must not contribute biased (low) tau."""
+    # device 0: interior contact + one cut by the horizon; device 1: clean
+    mask = np.zeros((100, 2), bool)
+    mask[12:30, 0] = True   # interior: 18 s
+    mask[85:, 0] = True     # truncated: 15 s observed, real length unknown
+    mask[40:58, 1] = True
+    z_keep, t_keep = rounds_from_in_range(mask, 1.0, 10, 10.0)
+    z_drop, t_drop = rounds_from_in_range(mask, 1.0, 10, 10.0,
+                                          drop_truncated=True)
+    # exact cross-check against the oracle with host-side interval filtering
+    z_o, t_o = _oracle_rounds(mask, 1.0, 10, 10.0, drop_truncated=True)
+    np.testing.assert_array_equal(np.asarray(z_drop), z_o)
+    np.testing.assert_array_equal(np.asarray(t_drop), t_o)
+    # the censored cells disappear, everything else is untouched
+    z_keep, t_keep = np.asarray(z_keep), np.asarray(t_keep)
+    z_drop, t_drop = np.asarray(z_drop), np.asarray(t_drop)
+    assert z_keep[8, 0] == 1 and z_drop[8, 0] == 0  # round 8 = steps 80..89
+    assert z_keep.sum() - z_drop.sum() == 2  # rounds 8 and 9 of device 0
+    np.testing.assert_array_equal(z_drop[:, 1], z_keep[:, 1])
+    # censoring-in-place under-states the window (15 < 18): dropping the
+    # truncated run removes the biased-low tau samples
+    kept_tau = t_keep[(z_keep == 1) & (z_drop == 0)]
+    assert kept_tau.max() <= 15.0
+    assert t_drop[np.asarray(z_drop) == 1].min() > 0
+
+
+def test_schedule_pipeline_is_jittable_end_to_end():
+    """Zero mid-trace host syncs: the whole trace->schedule pipeline must
+    trace under an OUTER jit (any host materialisation of a traced array
+    would raise a ConcretizationTypeError)."""
+    from repro.scenarios.jax_kinematics import _schedule
+
+    model = JaxGaussMarkovModel(num_devices=8, area=400.0, seed=0)
+    outer = jax.jit(lambda k: _schedule(model, k, 20, 10.0, 1.0, 100.0,
+                                        25.0, 3.5, False))
+    zeta, tau, h2 = outer(jax.random.key(0))
+    assert isinstance(zeta, jax.Array) and isinstance(h2, jax.Array)
+    assert zeta.shape == tau.shape == h2.shape == (20, 8)
+    z, t = np.asarray(zeta), np.asarray(tau)
+    assert ((t > 0) == (z == 1)).all()
+    assert np.isfinite(np.asarray(h2)).all() and (np.asarray(h2) > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# channel gains (statistical twins of the oracle tests)
+# ---------------------------------------------------------------------------
+
+
+def test_jax_gains_static_devices_see_constant_channel():
+    from repro.scenarios import jax_gains_along_trace
+
+    pos = jnp.broadcast_to(jnp.asarray([[30.0, 0.0], [80.0, 0.0]]),
+                           (50, 2, 2))
+    mes = jnp.zeros((50, 2))
+    h2 = np.asarray(jax_gains_along_trace(jax.random.key(3), pos, mes))
+    # zero displacement -> shadowing and LOS state frozen -> constant gain
+    np.testing.assert_allclose(h2, np.broadcast_to(h2[0], h2.shape),
+                               rtol=1e-5)
+
+
+def test_jax_gains_decrease_with_distance():
+    from repro.scenarios import jax_gains_along_trace
+
+    pos = jnp.broadcast_to(jnp.asarray([[15.0, 0.0], [90.0, 0.0]]),
+                           (5, 2, 2))
+    h2 = np.asarray(jax_gains_along_trace(
+        jax.random.key(0), pos, jnp.zeros((5, 2)),
+        shadow_los_db=0.0, shadow_nlos_db=0.0))
+    assert (h2[:, 0] > h2[:, 1]).all()
+
+
+# ---------------------------------------------------------------------------
+# theory: extractor statistics vs core/theory.py closed forms
+# ---------------------------------------------------------------------------
+
+
+def _exp_onoff_mask(steps, n, c, lam, dt, seed):
+    """Stationary exponential alternating-renewal ON/OFF mask — the
+    contact process Lemma 2's closed forms are derived for."""
+    rng = np.random.default_rng(seed)
+    horizon = steps * dt
+    mask = np.zeros((steps, n), bool)
+    t_grid = np.arange(steps) * dt
+    for i in range(n):
+        # memorylessness: a stationary start is an Exp residual phase
+        t, on = 0.0, rng.random() < c / (c + lam)
+        while t < horizon:
+            dur = rng.exponential(c if on else lam)
+            if on:
+                mask[(t_grid >= t) & (t_grid < t + dur), i] = True
+            t, on = t + dur, not on
+    return mask
+
+
+def test_contact_rate_and_times_in_theory_bands():
+    """Measured contact rate / mean contact & intercontact times from the
+    JAX extractor sit inside CI bands of the renewal closed forms."""
+    c, lam, dt, delta = 8.0, 40.0, 1.0, 10.0
+    steps, n, rounds = 5000, 128, 500
+    mask = _exp_onoff_mask(steps, n, c, lam, dt, seed=0)
+    c_meas, g_meas = measure_contact_stats(mask, dt=dt)
+    assert abs(c_meas - c) / c < 0.08
+    assert abs(g_meas - lam) / lam < 0.08
+    zeta, _ = rounds_from_in_range(mask, dt, rounds, delta)
+    # stationary renewal: P(round has contact) = 1 - P(off at the round
+    # start) P(residual off > delta) = 1 - lam/(c+lam) e^{-delta/lam} —
+    # the same alternating-renewal algebra behind staleness_second_moment
+    p_theory = 1.0 - lam / (c + lam) * np.exp(-delta / lam)
+    p_meas = float(np.asarray(zeta).mean())
+    assert abs(p_meas - p_theory) / p_theory < 0.07, (p_meas, p_theory)
+
+
+def test_staleness_second_moment_bound_holds():
+    """Lemma 2 (core/theory.staleness_second_moment) upper-bounds the
+    measured staleness second moment of the JAX-extracted schedule."""
+    from repro.core.theory import staleness_second_moment
+
+    c, lam, dt, delta = 8.0, 40.0, 1.0, 10.0
+    steps, n, rounds = 5000, 128, 500
+    mask = _exp_onoff_mask(steps, n, c, lam, dt, seed=1)
+    zeta = np.asarray(rounds_from_in_range(mask, dt, rounds, delta)[0])
+    gaps = []
+    for i in range(n):
+        hits = np.nonzero(zeta[:, i])[0]
+        gaps.extend(np.diff(hits))
+    gaps = np.asarray(gaps, np.float64)
+    assert gaps.size > 1000
+    theta2 = float((gaps**2).mean())
+    bound = staleness_second_moment(c, lam, delta)
+    assert theta2 <= bound * 1.1, (theta2, bound)
+    assert theta2 >= bound * 0.05  # the bound is meaningful, not vacuous
+
+
+# ---------------------------------------------------------------------------
+# heterogeneity: gating, stationarity, DeviceTable counters
+# ---------------------------------------------------------------------------
+
+
+def test_het_gating_matches_python_reference():
+    rng = np.random.default_rng(0)
+    rounds, n = 60, 12
+    zeta = (rng.random((rounds, n)) < 0.5).astype(np.int32)
+    tau = np.where(zeta, rng.exponential(8.0, (rounds, n)), 0.0) \
+        .astype(np.float32)
+    avail = rng.random((rounds, n)) < 0.7
+    latency = rng.exponential(2.0, (rounds, n)).astype(np.float32)
+    drop = rng.random((rounds, n)) < 0.25
+    z_v, t_v, a_v = gate_windows(zeta, tau, avail, latency, drop)
+    z_r, t_r, a_r = reference_apply(zeta, tau, avail, latency, drop)
+    np.testing.assert_array_equal(z_v, z_r)
+    np.testing.assert_array_equal(t_v, t_r)
+    for k in ("unavail", "dropout"):
+        np.testing.assert_array_equal(a_v[k], a_r[k])
+    # identical draws through jnp operands: same cells exactly
+    z_d, t_d, a_d = gate_windows(jnp.asarray(zeta), jnp.asarray(tau),
+                                 jnp.asarray(avail), jnp.asarray(latency),
+                                 jnp.asarray(drop))
+    np.testing.assert_array_equal(np.asarray(z_d), z_r)
+    np.testing.assert_array_equal(np.asarray(t_d), t_r)
+    for k in ("unavail", "dropout"):
+        np.testing.assert_array_equal(np.asarray(a_d[k]), a_r[k])
+
+
+def test_het_loss_causes_are_exclusive():
+    """Every pre-gate contact resolves to exactly one outcome: success,
+    unavailable, dropout, or latency-eaten (first cause wins)."""
+    rng = np.random.default_rng(1)
+    rounds, n = 80, 16
+    zeta = (rng.random((rounds, n)) < 0.6).astype(np.int32)
+    tau = np.where(zeta, rng.exponential(5.0, (rounds, n)), 0.0) \
+        .astype(np.float32)
+    avail = rng.random((rounds, n)) < 0.6
+    latency = rng.exponential(3.0, (rounds, n)).astype(np.float32)
+    drop = rng.random((rounds, n)) < 0.4
+    z, t, aux = gate_windows(zeta, tau, avail, latency, drop)
+    overlap = z * aux["unavail"] + z * aux["dropout"] \
+        + aux["unavail"] * aux["dropout"]
+    assert not overlap.any()
+    assert (z + aux["unavail"] + aux["dropout"] <= zeta).all()
+    assert (t[z == 1] > 0).all() and (t[z == 0] == 0).all()
+
+
+@pytest.mark.parametrize("pi,rho", [(0.3, 0.0), (0.7, 0.5), (0.9, 0.8)])
+def test_het_availability_stationary_distribution(pi, rho):
+    """P(on->on) = rho + (1-rho) pi, P(off->on) = (1-rho) pi gives a chain
+    whose stationary availability is exactly pi, for any persistence."""
+    m = HeterogeneityModel(num_devices=400, availability=pi,
+                           avail_persist=rho, seed=3)
+    states = m.sample_states(500)
+    assert abs(states.mean() - pi) < 0.02
+    # device-resident twin: same stationary law from jax.random draws
+    from repro.scenarios.heterogeneity import _jax_draws
+
+    avail_j, _, _ = _jax_draws(m, jax.random.key(4), 500)
+    assert abs(float(np.asarray(avail_j).mean()) - pi) < 0.02
+
+
+def test_het_provider_masks_disjoint_from_successes():
+    fl = FLConfig(num_devices=16, rounds=200, mobility_model="exponential",
+                  mean_contact=30.0, mean_intercontact=80.0,
+                  het_dropout=0.3, het_availability=0.7, het_compute_mean=2.0)
+    p = ScenarioProvider.from_config(fl, 200, 0)
+    zeta, tau, _ = p.schedule()
+    aux = p.aux
+    assert aux is not None and set(aux) == {"unavail", "dropout"}
+    assert aux["dropout"].sum() > 0 and aux["unavail"].sum() > 0
+    assert not (zeta * aux["dropout"]).any()  # a dropped cell never succeeds
+    assert not (zeta * aux["unavail"]).any()
+    assert ((tau > 0) == (zeta == 1)).all()
+    # round accessor slices the same masks
+    r = int(np.nonzero(aux["dropout"].sum(1))[0][0])
+    np.testing.assert_array_equal(p.aux_round(r)["dropout"], aux["dropout"][r])
+
+
+def test_het_disabled_is_identity():
+    fl = FLConfig(num_devices=8, rounds=50, mobility_model="exponential")
+    fl_het = dataclasses.replace(fl, het_dropout=0.0, het_availability=1.0,
+                                 het_compute_mean=0.0)
+    z0, t0, _ = ScenarioProvider.from_config(fl, 50, 0).schedule()
+    p = ScenarioProvider.from_config(fl_het, 50, 0)
+    z1, t1, _ = p.schedule()
+    assert p.aux is None and p.aux_round(0) is None
+    np.testing.assert_array_equal(z0, z1)
+    np.testing.assert_array_equal(t0, t1)
+
+
+def test_het_dropout_never_yields_device_table_success():
+    """End-to-end: with dropout=1 every contact is lost before the engine,
+    so the flight recorder sees zero successes and only dropout losses."""
+    from repro.telemetry import DeviceTable, TelemetrySuite, AFL_REGISTRY
+
+    fl = FLConfig(num_devices=8, rounds=40, mobility_model="exponential",
+                  mean_contact=30.0, mean_intercontact=60.0, het_dropout=1.0)
+    provider = ScenarioProvider.from_config(fl, 40, 0)
+    zeta, tau, _ = provider.schedule()
+    assert zeta.sum() == 0  # nothing survives the gate...
+    aux = provider.aux
+    assert aux["dropout"].sum() > 0  # ...because dropout ate real contacts
+    # DeviceTable accounting: update() per round + update_het() on the masks
+    table = DeviceTable(8)
+    state = table.init_state()
+    for r in range(40):
+        zr = jnp.asarray(zeta[r], jnp.float32)
+        metrics = {"uploads": zr, "success": zr, "theta": jnp.zeros(8),
+                   "bits": jnp.zeros(8), "energy": jnp.zeros(8)}
+        state = table.update(state, metrics, jnp.asarray(tau[r]))
+        state = table.update_het(state, provider.aux_round(r))
+    assert float(state["successes"].sum()) == 0.0
+    assert float(state["dropouts"].sum()) == float(aux["dropout"].sum())
+    assert float(state["unavail"].sum()) == 0.0
+
+
+def test_het_jax_apply_matches_numpy_in_distribution():
+    from repro.scenarios.heterogeneity import jax_apply
+
+    rng = np.random.default_rng(5)
+    rounds, n = 400, 64
+    zeta = (rng.random((rounds, n)) < 0.5).astype(np.int32)
+    tau = np.where(zeta, rng.exponential(10.0, (rounds, n)), 0.0) \
+        .astype(np.float32)
+    m = HeterogeneityModel(num_devices=n, availability=0.8, avail_persist=0.3,
+                           compute_mean=2.0, dropout=0.2, seed=9)
+    z_np, t_np, a_np = m.apply(zeta, tau)
+    z_j, t_j, a_j = jax_apply(m, jnp.asarray(zeta), jnp.asarray(tau))
+    # independent PRNGs: survival and loss rates agree within CI bands
+    assert abs(z_np.mean() - float(jnp.mean(z_j.astype(jnp.float32)))) < 0.03
+    for k in ("unavail", "dropout"):
+        assert abs(a_np[k].mean() - float(jnp.mean(a_j[k]))) < 0.02
+    surv_np = t_np[z_np == 1].mean()
+    surv_j = float(jnp.sum(t_j) / jnp.maximum(jnp.sum(z_j), 1))
+    assert abs(surv_np - surv_j) / surv_np < 0.15
+
+
+# ---------------------------------------------------------------------------
+# provider backends: the jax path through ScenarioProvider
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["rwp", "gauss_markov", "manhattan",
+                                  "hotspot", "static"])
+def test_provider_jax_backend_produces_rounds(name):
+    fl = FLConfig(num_devices=16, rounds=100, mobility_model=name,
+                  speed=10.0, area=600.0, seed=1, scenario_backend="jax")
+    zeta, tau, h2 = ScenarioProvider.from_config(fl).schedule()
+    assert zeta.shape == tau.shape == h2.shape == (100, 16)
+    assert isinstance(zeta, jax.Array)  # device-resident, no host copy
+    z, t, h = np.asarray(zeta), np.asarray(tau), np.asarray(h2)
+    if name != "static":
+        assert z.sum() > 0, name
+    assert ((t > 0) == (z == 1)).all()
+    assert (h > 0).all() and np.isfinite(h).all()
+
+
+def test_provider_unknown_backend_raises():
+    fl = FLConfig(num_devices=4, rounds=10, scenario_backend="tpu9000")
+    with pytest.raises(KeyError):
+        ScenarioProvider.from_config(fl)
+
+
+def test_provider_jax_backend_exponential_stays_host_side():
+    """The renewal abstraction has no kinematics to port: backend='jax'
+    falls through to the (already vectorized) host build."""
+    fl = FLConfig(num_devices=8, rounds=30, mobility_model="exponential",
+                  scenario_backend="jax")
+    zeta, tau, h2 = ScenarioProvider.from_config(fl).schedule()
+    assert isinstance(zeta, np.ndarray)
+    assert zeta.shape == (30, 8)
+
+
+def test_differential_smoke_n512():
+    """Tier-1 smoke at N=512: both backends build the same scenario point
+    and agree on contact statistics within CI bands; the extraction layer
+    agrees exactly on the shared in-range matrix."""
+    n, rounds = 512, 60
+    base = dict(num_devices=n, rounds=rounds, mobility_model="gauss_markov",
+                speed=10.0, area=800.0, seed=4)
+    z_np, t_np, _ = ScenarioProvider.from_config(
+        FLConfig(**base)).schedule()
+    z_j, t_j, _ = ScenarioProvider.from_config(
+        FLConfig(scenario_backend="jax", **base)).schedule()
+    z_j, t_j = np.asarray(z_j), np.asarray(t_j)
+    assert z_j.shape == z_np.shape == (rounds, n)
+    assert abs(z_j.mean() - z_np.mean()) / z_np.mean() < 0.2
+    assert abs(t_j[z_j == 1].mean() - t_np[z_np == 1].mean()) \
+        / t_np[z_np == 1].mean() < 0.2
+    # shared-mask differential at the same scale: exact
+    m = JaxGaussMarkovModel(num_devices=n, area=800.0, mean_speed=10.0,
+                            seed=4)
+    mask = np.asarray(m.trace(rounds * 10.0, 1.0).in_range(100.0))
+    z_o, t_o = _oracle_rounds(mask, 1.0, rounds, 10.0)
+    z_x, t_x = rounds_from_in_range(mask, 1.0, rounds, 10.0)
+    np.testing.assert_array_equal(np.asarray(z_x), z_o)
+    np.testing.assert_array_equal(np.asarray(t_x), t_o)
+
+
+@pytest.mark.slow
+def test_differential_large_n_1e5():
+    """N=1e5: generation + extraction stay device-resident and exact vs
+    the oracle on the shared mask (short horizon bounds memory)."""
+    n = 100_000
+    m = JaxGaussMarkovModel(num_devices=n, area=2000.0, mean_speed=10.0,
+                            seed=0)
+    zeta, tau, h2 = jax_schedule_from_model(m, rounds=20, round_duration=10.0)
+    assert zeta.shape == (20, n)
+    z = np.asarray(zeta)
+    assert 0 < z.mean() < 1
+    mask = np.asarray(m.trace(200.0, 1.0).in_range(100.0))
+    z_o, t_o = _oracle_rounds(mask, 1.0, 20, 10.0)
+    z_j, t_j = rounds_from_in_range(mask, 1.0, 20, 10.0)
+    np.testing.assert_array_equal(np.asarray(z_j), z_o)
+    np.testing.assert_array_equal(np.asarray(t_j), t_o)
+
+
+@pytest.mark.slow
+def test_generation_scales_to_1e6_devices():
+    """The million-device point: a (short-horizon) trace + schedule builds
+    without host round-trips or O(N) Python anywhere."""
+    n = 1_000_000
+    m = JaxGaussMarkovModel(num_devices=n, area=5000.0, mean_speed=10.0,
+                            seed=1)
+    zeta, tau, _ = jax_schedule_from_model(m, rounds=4, round_duration=5.0)
+    assert zeta.shape == (4, n)
+    z, t = np.asarray(zeta), np.asarray(tau)
+    assert ((t > 0) == (z == 1)).all()
+    assert 0 < z.mean() < 1
