@@ -1,0 +1,57 @@
+"""Streaming ingestion server throughput (repro/serve).
+
+serve_fused        fused batched decompress+aggregate vs the per-upload
+                   loop baseline (the acceptance point: N=1e4 queued
+                   uploads, >= 3x the loop's uploads/sec on CPU)
+serve_scatter      the O(B*K) scatter aggregation kernel at the same
+                   point (same math up to float summation order)
+serve_staleness    hinge staleness-weighted mixing at the fused point
+                   (the discount costs nothing — same fused program)
+
+``--smoke`` (benchmarks.run) keeps one reduced fused row — the
+committed-baseline set gated by ``tools/bench_compare.py`` in CI
+(BENCH_serve.json); ``uploads_per_s`` is the higher-is-better metric.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row
+from repro.launch.soak import run_soak
+
+
+def _row(name: str, res: dict) -> str:
+    derived = f"uploads_per_s={res['fused_per_s']:.0f}"
+    if "speedup_vs_loop" in res:
+        derived += (f";loop_per_s={res['loop_per_s']:.0f}"
+                    f";speedup_vs_loop={res['speedup_vs_loop']:.1f}x")
+    rej = res["snapshot"]["counters"]["rejected"]
+    der = res["snapshot"]["counters"]["deferred"]
+    derived += f";rejected={rej:.0f};deferred={der:.0f}"
+    us = res["fused_wall_s"] / max(res["uploads"], 1) * 1e6
+    return csv_row(name, us, derived)
+
+
+def serve_fused(smoke: bool = False):
+    n, b, s, k = (1500, 128, 2048, 128) if smoke else (10_000, 256, 4096, 256)
+    res = run_soak(uploads=n, batch=b, s=s, max_k=k, codec="topk",
+                   mode="parity")
+    return [_row(f"serve_fused_topk_n{n}_b{b}_s{s}", res)]
+
+
+def serve_scatter():
+    n, b, s, k = 10_000, 256, 4096, 256
+    res = run_soak(uploads=n, batch=b, s=s, max_k=k, codec="topk",
+                   mode="scatter")
+    return [_row(f"serve_scatter_topk_n{n}_b{b}_s{s}", res)]
+
+
+def serve_staleness():
+    n, b, s, k = 10_000, 256, 4096, 256
+    res = run_soak(uploads=n, batch=b, s=s, max_k=k, codec="topk",
+                   staleness_family="hinge", baseline=False)
+    return [_row(f"serve_fused_hinge_n{n}_b{b}_s{s}", res)]
+
+
+def run(smoke: bool = False):
+    if smoke:  # CI: the committed-baseline gated row only
+        return serve_fused(smoke=True)
+    return serve_fused() + serve_scatter() + serve_staleness()

@@ -26,6 +26,7 @@ MODULES = [
     ("kernels", "benchmarks.bench_kernels"),
     ("compression", "benchmarks.bench_compression"),
     ("mobility", "benchmarks.bench_mobility"),
+    ("serve", "benchmarks.bench_serve"),
     ("afl", "benchmarks.bench_afl"),
     ("mads", "benchmarks.bench_mads"),
     ("trajectory", "benchmarks.bench_trajectory"),

@@ -1,11 +1,16 @@
 """Batched serving of assigned architectures (reduced variants on CPU):
 prefill a batch of prompts, then greedy-decode — the same code paths the
 decode_32k / long_500k dry-runs lower at production scale (flash-decode and
-SSD kernels on TPU).
+SSD kernels on TPU).  Attention archs additionally run the sliding-window
+ring-cache path (``--window``), where the KV cache stays at the window
+size no matter how far decode runs past it.
 
 Runtime: ~2 minutes on one CPU core.
     PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --gen 24 --window 40
 """
+import argparse
+
 import jax
 import numpy as np
 
@@ -16,19 +21,52 @@ from repro.models.registry import build_model
 ARCHS = ["llama3.2-3b", "mamba2-2.7b", "qwen3-moe-30b-a3b"]
 
 
+def run_arch(name: str, *, batch: int, prompt_len: int, gen: int,
+             window: int = 0, seed: int = 0):
+    """Serve one reduced arch; returns (tokens, stats)."""
+    rng = np.random.default_rng(seed)
+    cfg = get_config(name).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(seed))
+    prompts = jax.numpy.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jax.numpy.int32
+    )
+    use_window = window if cfg.family in ("dense", "moe", "vlm") else 0
+    toks, stats = serve(cfg, model, params, prompts, gen=gen,
+                        window=use_window)
+    label = f"window={use_window}" if use_window else "full-cache"
+    print(f"{name:20s} family={cfg.family:6s} {label:12s} "
+          f"params={model.num_params():>9,} "
+          f"prefill={stats['prefill_s']:.2f}s decode={stats['decode_s']:.2f}s "
+          f"({stats['tok_per_s']:.1f} tok/s) tokens={np.asarray(toks)[0].tolist()}")
+    return toks, stats
+
+
 def main():
-    rng = np.random.default_rng(0)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--window", type=int, default=36,
+                    help="ring-cache window for the sliding-window pass "
+                         "(0 skips it; must be >= prompt-len, and < "
+                         "prompt-len + gen to actually wrap)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
     for name in ARCHS:
-        cfg = get_config(name).reduced()
-        model = build_model(cfg)
-        params = model.init(jax.random.key(0))
-        prompts = np.asarray(
-            rng.integers(0, cfg.vocab_size, (2, 32)), np.int32
-        )
-        toks, stats = serve(cfg, model, params, jax.numpy.asarray(prompts), gen=8)
-        print(f"{name:20s} family={cfg.family:6s} params={model.num_params():>9,} "
-              f"prefill={stats['prefill_s']:.2f}s decode={stats['decode_s']:.2f}s "
-              f"({stats['tok_per_s']:.1f} tok/s) tokens={np.asarray(toks)[0].tolist()}")
+        run_arch(name, batch=args.batch, prompt_len=args.prompt_len,
+                 gen=args.gen, seed=args.seed)
+    if args.window:
+        # the ring-cache path: window < prompt + gen forces cache wrap
+        # (prefill still needs the whole prompt resident)
+        if args.window < args.prompt_len:
+            raise SystemExit("--window must be >= --prompt-len")
+        for name in ARCHS:
+            if get_config(name).family in ("dense", "moe", "vlm"):
+                run_arch(name, batch=args.batch,
+                         prompt_len=args.prompt_len, gen=args.gen,
+                         window=args.window, seed=args.seed)
 
 
 if __name__ == "__main__":

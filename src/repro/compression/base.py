@@ -259,7 +259,12 @@ class Compressor:
             lambda e, x_: jnp.where(feasible > 0, e, x_), error, xt)
         k_actual = k_actual * feasible
         stats = {"k": k_actual, "bits": bits * feasible,
-                 "b": jnp.asarray(b, jnp.float32) * (k_actual > 0)}
+                 "b": jnp.asarray(b, jnp.float32) * (k_actual > 0),
+                 # the message's quantisation scale — what a receiver needs
+                 # to reconstruct grid codes from the wire (wire.py); 1.0
+                 # on the raw-f32 path
+                 "step": (jnp.asarray(step, jnp.float32) if quantize
+                          else jnp.float32(1.0))}
         return payload, self.next_state(error, state), stats
 
     # -- the contract -------------------------------------------------------

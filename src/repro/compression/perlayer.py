@@ -230,5 +230,8 @@ def compress_per_layer(comp, xt, budget_bits, state):
         "b": jnp.where(
             k_total > 0, b_weighted / jnp.maximum(k_total, 1.0), 0.0
         ) * feasible,
+        # per-leaf scales don't fit the single-step wire header: 0 tells
+        # the encoder to fall back to raw-f32 codes (wire.py)
+        "step": jnp.float32(0.0),
     }
     return payload, comp.next_state(error, state), stats

@@ -46,5 +46,6 @@ class QSGDCompressor(Compressor):
             lambda e, x_: jnp.where(send > 0, e, x_), error, xt)
         # bits <= budget by construction: b = floor((budget - 32) / s)
         bits = send * (float(self.s) * b + Q.SCALE_BITS)
-        stats = {"k": send * float(self.s), "bits": bits, "b": b}
+        stats = {"k": send * float(self.s), "bits": bits, "b": b,
+                 "step": jnp.asarray(step, jnp.float32)}
         return payload, self.next_state(error, state), stats

@@ -1,0 +1,145 @@
+"""Wire format for compressed client uploads (the serve-path payloads).
+
+Every codec in this package produces a *dense dequantised* payload tree —
+the right interface for the simulation engines, where the MES aggregation
+is a tensor contraction on device.  A streaming aggregation server
+(``repro/serve``) instead receives uploads one at a time over the network,
+so this module defines the (de)serialisation contract between them:
+
+* ``WirePayload`` — one upload on the wire: sorted flat coordinates, the
+  value codes, a quantisation step, and the header scalars the server
+  needs for staleness-weighted mixing (device id, the model-version round
+  ``rnd`` the upload was computed against, the billed ``bits``).
+* Value codes are ``int32`` carrying either the *b-bit integer grid codes*
+  (``b < 32``: the stochastic-rounding output ``q`` of
+  ``compression.quant``, dequantised server-side as ``q * step`` — the
+  exact float multiply the codecs perform, so decode is bit-identical to
+  the dense payload) or the *raw float32 bit pattern* (``b == 32``,
+  bitcast, ``step == 1``).
+* ``pack_batch`` pads a list of payloads onto static ``(batch, max_k)``
+  device arrays (pad coordinate = ``s``, dropped by the scatter), which
+  is what makes the server's decompress+aggregate ONE jitted program over
+  the whole batch instead of a per-upload loop.
+
+Bit accounting mirrors ``base.Compressor``: ``k * (b + ceil(log2 s))``
+index+value bits plus one 32-bit scale per quantised message (eq. 7c).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression import quant as Q
+
+__all__ = ["WirePayload", "encode_upload", "pack_batch", "decode_values",
+           "index_bits"]
+
+
+def index_bits(s: int) -> int:
+    """Per-coordinate position overhead on the wire (paper eq. 7c)."""
+    return int(math.ceil(math.log2(max(s, 2))))
+
+
+class WirePayload(NamedTuple):
+    """One compressed upload as serialised for the aggregation server."""
+
+    coords: np.ndarray  # (k,) int32 flat coordinate indices, ascending
+    codes: np.ndarray  # (k,) int32 grid codes (b<32) or f32 bit patterns
+    step: float  # quantisation step (1.0 for raw float values)
+    b: float  # value bit-width on the wire (32 = raw float32)
+    k: int  # number of shipped coordinates
+    device: int = 0  # uploading client id
+    rnd: int = 0  # model-version round the upload was computed against
+    ok: float = 1.0  # client-side feasibility mask (0 withholds mixing)
+    bits: float = 0.0  # billed wire bits (header; k (b + log2 s) + scale)
+
+
+def encode_upload(payload_tree, *, b: float = 32.0, step: float = 1.0,
+                  device: int = 0, rnd: int = 0, ok: float = 1.0,
+                  max_k: int | None = None) -> WirePayload:
+    """Serialise one dense dequantised payload tree onto the wire.
+
+    ``b``/``step`` come from the codec's per-upload stats (``stats["b"]``
+    and the message's quantisation step); ``b >= 32`` (or a zero/absent
+    step) ships raw float32 bit patterns instead of grid codes.  Host-side
+    by design — encoding happens at the *client*, the server only ever
+    decodes.  Raises if the upload carries more than ``max_k`` nonzeros
+    (an oversized payload must be rejected at the edge, not truncated
+    silently).
+    """
+    leaves = jax.tree.leaves(payload_tree)
+    flat = np.concatenate(
+        [np.asarray(l, np.float32).reshape(-1) for l in leaves])
+    s = flat.size
+    nz = np.flatnonzero(flat)
+    if max_k is not None and nz.size > max_k:
+        raise ValueError(
+            f"upload has {nz.size} nonzero coords > max_k={max_k}")
+    vals = flat[nz]
+    b = float(b)
+    quantized = b < 32.0 and step > 0.0
+    if quantized:
+        # recover the integer grid codes: vals = q * step with |q| small,
+        # so the float64 divide rounds back to q exactly
+        codes = np.rint(vals.astype(np.float64) / step).astype(np.int32)
+    else:
+        codes = vals.view(np.int32)
+        step, b = 1.0, 32.0
+    k = int(nz.size)
+    bits = k * (b + index_bits(s)) + (Q.SCALE_BITS if (quantized and k) else 0)
+    return WirePayload(coords=nz.astype(np.int32), codes=codes,
+                       step=float(step), b=b, k=k, device=int(device),
+                       rnd=int(rnd), ok=float(ok), bits=float(bits))
+
+
+def pack_batch(payloads: Sequence[WirePayload], *, s: int, max_k: int,
+               batch: int, server_round: int = 0) -> dict:
+    """Pad up to ``batch`` payloads onto static-shape arrays for the
+    fused ingest op.
+
+    Pad coordinate is ``s`` (out of range — the scatter drops it); empty
+    slots carry ``mask = 0`` and contribute exact zeros to the weighted
+    contraction.  ``dtau`` is the server-side staleness
+    ``server_round - payload.rnd`` (clipped at 0) that the
+    ``alpha * s(delta_tau)`` mixing family consumes.
+    """
+    if len(payloads) > batch:
+        raise ValueError(f"{len(payloads)} payloads > batch={batch}")
+    coords = np.full((batch, max_k), s, np.int32)
+    codes = np.zeros((batch, max_k), np.int32)
+    steps = np.ones((batch,), np.float32)
+    bw = np.full((batch,), 32.0, np.float32)
+    dtau = np.zeros((batch,), np.float32)
+    mask = np.zeros((batch,), np.float32)
+    bits = np.zeros((batch,), np.float32)
+    for i, p in enumerate(payloads):
+        if p.k > max_k:
+            raise ValueError(f"payload k={p.k} > max_k={max_k}")
+        coords[i, : p.k] = p.coords
+        codes[i, : p.k] = p.codes
+        steps[i] = p.step
+        bw[i] = p.b
+        dtau[i] = max(server_round - p.rnd, 0)
+        mask[i] = p.ok
+        bits[i] = p.bits
+    return {"coords": coords, "codes": codes, "step": steps, "b": bw,
+            "dtau": dtau, "mask": mask, "bits": bits}
+
+
+def decode_values(codes, steps, bwidths):
+    """Dequantise a packed ``(B, K)`` code block (jnp, jit-traceable).
+
+    ``b < 32`` rows decode as ``codes * step`` — the same single float32
+    multiply the codecs' ``stochastic_round`` performed, hence bit-equal
+    to the dense payload — and ``b == 32`` rows bitcast the raw float
+    pattern back.
+    """
+    codes = jnp.asarray(codes, jnp.int32)
+    grid = codes.astype(jnp.float32) * jnp.asarray(steps, jnp.float32)[:, None]
+    raw = jax.lax.bitcast_convert_type(codes, jnp.float32)
+    return jnp.where(jnp.asarray(bwidths, jnp.float32)[:, None] < 32.0,
+                     grid, raw)

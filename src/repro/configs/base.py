@@ -206,6 +206,15 @@ class FLConfig:
     # joint codec: solve (k_l, b_l) per pytree leaf by greedy water-filling
     # against the same tau*A budget (repro/compression/perlayer.py)
     per_layer_budget: bool = False
+    # staleness-discounted aggregation (core/afl.py::StalenessWeight): the
+    # FedAsync alpha * s(delta_tau) mixing family shared by the engines and
+    # the streaming ingestion server (repro/serve).  The default — constant
+    # at alpha = 1 — is the paper's rule and compiles to the identity
+    staleness_family: str = "constant"  # constant | hinge | poly
+    staleness_alpha: float = 1.0
+    staleness_hinge_a: float = 10.0
+    staleness_hinge_b: float = 4.0
+    staleness_poly_a: float = 0.5
     # telemetry (repro/telemetry): True enables the built-in AFL metric
     # registry (staleness/bits/tau/k/b histograms + round counters) in the
     # runners; consumed host-side when resolving the registry, the compiled

@@ -37,6 +37,58 @@ class AflState(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
+class StalenessWeight:
+    """The FedAsync ``alpha * s(delta_tau)`` staleness-discount family.
+
+    The paper's MES mixes every upload at a constant weight; Xie et al.'s
+    asynchronous-optimization line generalises the rule to a staleness-
+    dependent discount ``alpha * s(delta_tau)`` with ``s`` drawn from:
+
+    * ``constant``: ``s = 1``            (the paper's rule at ``alpha``)
+    * ``hinge``:    ``s = 1`` while ``delta_tau <= hinge_b``, then
+                    ``1 / (hinge_a * (delta_tau - hinge_b))``
+    * ``poly``:     ``s = (delta_tau + 1) ** -poly_a``
+
+    Frozen/hashable so it rides ``Policy`` (and the serve-path ingest op)
+    as a jit static argument.  The default — constant at ``alpha = 1`` —
+    is the identity: engines skip the multiply entirely (``is_identity``
+    is a compile-time branch), so existing programs are unchanged.
+    """
+
+    family: str = "constant"  # constant | hinge | poly
+    alpha: float = 1.0
+    hinge_a: float = 10.0
+    hinge_b: float = 4.0
+    poly_a: float = 0.5
+
+    FAMILIES = ("constant", "hinge", "poly")
+
+    @property
+    def is_identity(self) -> bool:
+        return self.family == "constant" and self.alpha == 1.0
+
+    def s(self, delta_tau):
+        """The undiscounted ``s(delta_tau)`` term (jnp-traceable)."""
+        dt = jnp.asarray(delta_tau, jnp.float32)
+        if self.family == "constant":
+            return jnp.ones_like(dt)
+        if self.family == "hinge":
+            return jnp.where(
+                dt <= self.hinge_b, 1.0,
+                1.0 / (self.hinge_a * jnp.maximum(dt - self.hinge_b, 1e-9)),
+            )
+        if self.family == "poly":
+            return (dt + 1.0) ** (-self.poly_a)
+        raise ValueError(
+            f"unknown staleness family {self.family!r}; "
+            f"known: {self.FAMILIES}")
+
+    def weight(self, delta_tau):
+        """``alpha * s(delta_tau)`` — the aggregation mixing weight."""
+        return self.alpha * self.s(delta_tau)
+
+
+@dataclasses.dataclass(frozen=True)
 class Policy:
     """Engine flags + (k, p) selection strategy."""
 
@@ -51,6 +103,16 @@ class Policy:
     # None -> the seed top-k-at-32-bit path below; a repro.compression codec
     # replaces the sparsify/quantize stage and spends tau*A(p) bits itself
     compressor: Compressor | None = None
+    # staleness-discounted aggregation weight alpha * s(delta_tau) shared
+    # by every engine AND the streaming ingestion server (repro/serve) —
+    # the default is the identity (the paper's constant rule at alpha=1)
+    staleness: StalenessWeight = StalenessWeight()
+    # True -> afl_round also returns the dense upload payloads under
+    # metrics["upload"] (N-stacked tree).  Test/serve plumbing only: the
+    # serve parity suite feeds the SAME uploads through the wire format
+    # and the fused ingest op.  Engines leave this False (the scan engine
+    # would otherwise buffer (rounds, N, s) payloads)
+    expose_uploads: bool = False
 
     def select(self, ctl: MadsController, zeta, theta, x_norm2, q, tau, h2):
         if self.controller is not None and self.fixed_power <= 0:
@@ -184,10 +246,16 @@ def afl_round(state: AflState, batch, zeta, tau, h2, energy_budget,
     if not policy.error_feedback:
         e_after = jax.tree.map(jnp.zeros_like, e_after)
 
-    # --- MES aggregation: w <- w - (1/N) sum zeta S(x_n) --------------------
+    # --- MES aggregation: w <- w - (1/N) sum a s(theta) zeta S(x_n) ---------
+    # mixing weight: the FedAsync alpha * s(delta_tau) staleness discount;
+    # the default family is the identity (compile-time branch), keeping the
+    # paper's constant rule — and the serve-path fused ingest op applies
+    # the SAME weights, which is what makes the two paths bit-comparable
+    mix = okf if policy.staleness.is_identity \
+        else okf * policy.staleness.weight(theta)
     w_new = jax.tree.map(
         lambda w, up: (
-            w - (jnp.tensordot(okf, up.astype(jnp.float32), axes=(0, 0)) / n).astype(w.dtype)
+            w - (jnp.tensordot(mix, up.astype(jnp.float32), axes=(0, 0)) / n).astype(w.dtype)
         ),
         state.w,
         upload,
@@ -226,6 +294,14 @@ def afl_round(state: AflState, batch, zeta, tau, h2, energy_budget,
         "bits": bits,  # realised upload payload (<= tau*A budget; eq. 7c)
         "b": b_used,  # value bit-width on the wire (u, or the codec's b*)
     }
+    if policy.expose_uploads:
+        # serve-parity plumbing: the dense payloads the MES just applied,
+        # plus the quantisation step a wire encoder needs to turn them
+        # back into grid codes (compression/wire.py; 1.0 = raw floats)
+        metrics["upload"] = upload
+        metrics["upload_step"] = (
+            cstats["step"] if policy.compressor is not None
+            else jnp.ones((n,), jnp.float32))
     new_state = AflState(
         w=w_new, w_n=w_n_new, g_n=g_n_new, e_n=e_n_new,
         kappa=kappa_new, q=q_new, energy=state.energy + energy, rnd=r,

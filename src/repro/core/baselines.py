@@ -39,8 +39,23 @@ from repro.compression import (
     QSGDCompressor,
     TopKCompressor,
 )
-from repro.core.afl import Policy
+from repro.core.afl import Policy, StalenessWeight
 from repro.core.mads import MadsController
+
+
+def _staleness(fl) -> StalenessWeight:
+    """The FLConfig-selected alpha * s(delta_tau) aggregation discount.
+
+    Every policy factory threads this through ``Policy.staleness`` so the
+    engines AND the streaming ingestion server (repro/serve) share one
+    mixing rule; the default (constant, alpha=1) is the identity."""
+    return StalenessWeight(
+        family=fl.staleness_family,
+        alpha=fl.staleness_alpha,
+        hinge_a=fl.staleness_hinge_a,
+        hinge_b=fl.staleness_hinge_b,
+        poly_a=fl.staleness_poly_a,
+    )
 
 
 def _controller(s: int, fl, **kw) -> MadsController:
@@ -56,12 +71,14 @@ def _controller(s: int, fl, **kw) -> MadsController:
 
 
 def mads(s: int, fl) -> Policy:
-    return Policy(name="mads", controller=_controller(s, fl))
+    return Policy(name="mads", controller=_controller(s, fl),
+                  staleness=_staleness(fl))
 
 
 def optimal(s: int, fl) -> Policy:
     return Policy(
         name="optimal",
+        staleness=_staleness(fl),
         controller=_controller(s, fl, energy_unconstrained=True),
     )
 
@@ -69,6 +86,7 @@ def optimal(s: int, fl) -> Policy:
 def afl_spar(s: int, fl) -> Policy:
     return Policy(
         name="afl-spar",
+        staleness=_staleness(fl),
         controller=_controller(s, fl),
         fixed_power=fl.max_power,
         energy_capped=True,
@@ -78,6 +96,7 @@ def afl_spar(s: int, fl) -> Policy:
 def fedasync(s: int, fl) -> Policy:
     return Policy(
         name="afl",
+        staleness=_staleness(fl),
         controller=_controller(s, fl),
         sparsify=False,
         error_feedback=False,
@@ -89,6 +108,7 @@ def fedasync(s: int, fl) -> Policy:
 def sfl_spar(s: int, fl) -> Policy:
     return Policy(
         name="sfl-spar",
+        staleness=_staleness(fl),
         controller=_controller(s, fl),
         fixed_power=fl.max_power,
         local_updates=False,
@@ -102,6 +122,7 @@ def fedmobile(s: int, fl) -> Policy:
     # (zeta, tau) schedule by ``apply_relays`` below.
     return Policy(
         name="fedmobile",
+        staleness=_staleness(fl),
         controller=_controller(s, fl),
         sparsify=False,
         error_feedback=False,
@@ -137,6 +158,7 @@ def mads_joint(s: int, fl) -> Policy:
     (k_l, b_l) pairs (greedy water-filling; `compression.perlayer`)."""
     return Policy(
         name="mads-joint",
+        staleness=_staleness(fl),
         controller=_controller(s, fl),
         compressor=JointCompressor(
             s=s, method=fl.sparsifier, sample=fl.sample_size,
@@ -155,6 +177,7 @@ def mads_topk(s: int, fl) -> Policy:
     distributed parity suite pins against the seed path."""
     return Policy(
         name="mads-topk",
+        staleness=_staleness(fl),
         controller=_controller(s, fl),
         compressor=TopKCompressor(
             s=s, method=fl.sparsifier, sample=fl.sample_size,
@@ -167,6 +190,7 @@ def qsgd(s: int, fl) -> Policy:
     """MADS power + dense stochastic quantisation (no sparsification)."""
     return Policy(
         name="qsgd",
+        staleness=_staleness(fl),
         controller=_controller(s, fl),
         compressor=QSGDCompressor(
             s=s, b_min=fl.compress_b_min, b_max=fl.compress_b_max,
@@ -178,6 +202,7 @@ def fixed_kb(s: int, fl) -> Policy:
     """MADS power + static (k, b) targets clipped to the contact budget."""
     return Policy(
         name="fixed-kb",
+        staleness=_staleness(fl),
         controller=_controller(s, fl),
         compressor=FixedKbCompressor(
             s=s, method=fl.sparsifier, sample=fl.sample_size,
@@ -193,7 +218,8 @@ def mads_no_ef(s: int, fl) -> Policy:
     under heavy sparsification the dropped-coordinate mass is lost forever
     without it, degrading convergence (see bench_ablation)."""
     return Policy(
-        name="mads-noef", controller=_controller(s, fl), error_feedback=False
+        name="mads-noef",
+        staleness=_staleness(fl), controller=_controller(s, fl), error_feedback=False
     )
 
 

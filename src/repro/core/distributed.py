@@ -172,7 +172,7 @@ def _split_clients(batch, n: int):
 
 def make_afl_train_step(model, cfg, dcfg: DistConfig, controller: MadsController,
                         compressor: Compressor | None = None,
-                        telemetry=None):
+                        telemetry=None, staleness=None):
     """Builds the jittable distributed AFL round.
 
     ``compressor``: optional ``repro.compression`` codec; when given, the
@@ -188,9 +188,15 @@ def make_afl_train_step(model, cfg, dcfg: DistConfig, controller: MadsController
     returns ``(state, metrics, tstate)`` — the accumulation rides the
     pjit program (replicated; histogram counts are exact integers, so the
     sharded client-axis reduce is bit-identical to single host).
+
+    ``staleness``: optional ``core.afl.StalenessWeight`` — the FedAsync
+    ``alpha * s(delta_tau)`` aggregation discount applied to the client-
+    axis contraction, identical to the single-host ``afl_round`` mixing
+    (None or the identity family keeps the paper's constant rule).
     """
     n = dcfg.num_clients
     eta = dcfg.learning_rate
+    sw = None if (staleness is None or staleness.is_identity) else staleness
 
     def step(state: DistAflState, batch, zeta, tau, h2, budgets,
              tstate=None):
@@ -239,11 +245,14 @@ def make_afl_train_step(model, cfg, dcfg: DistConfig, controller: MadsController
             b_used = jnp.full_like(k_actual, float(controller.u)) * okf
 
         # MES aggregation: contract the client axis (hierarchical all-reduce)
+        # with the optional alpha * s(delta_tau) staleness discount — the
+        # same mixing weights as afl_round and the serve-path fused ingest
         udt = jnp.dtype(dcfg.upload_dtype)
+        mix = okf if sw is None else okf * sw.weight(theta)
         w_new = jax.tree.map(
             lambda w, up: (
                 w.astype(udt)
-                - jnp.tensordot(okf.astype(udt), up.astype(udt), axes=(0, 0)) / n
+                - jnp.tensordot(mix.astype(udt), up.astype(udt), axes=(0, 0)) / n
             ).astype(w.dtype),
             state.w, upload,
         )
@@ -388,15 +397,33 @@ def telemetry_shardings(telemetry, mesh: Mesh):
     return jax.tree.map(lambda _: rep, state)
 
 
+def ingest_shardings(mesh: Mesh):
+    """Sharding specs for the serve-path fused ingest op on ``mesh``.
+
+    A packed wire batch (``repro.compression.wire.pack_batch``) shards its
+    leading BATCH axis over the mesh's ``data`` dimension — decode and the
+    per-upload scatter are elementwise on that axis, and the weighted
+    client contraction of the aggregation is the only collective (GSPMD
+    lowers it to the hierarchical all-reduce, exactly like the train
+    step's client-axis reduce).  The global model replicates.  Returns
+    ``{"batch": spec for (B, ...) arrays, "w": replicated spec}``.
+    """
+    return {
+        "batch": NamedSharding(mesh, P("data")),
+        "w": NamedSharding(mesh, P()),
+    }
+
+
 def make_afl_train_system(model, cfg, mesh: Mesh, dcfg: DistConfig | None = None,
                           rules=None, controller: MadsController | None = None,
                           compressor: Compressor | None = None,
-                          telemetry=None):
+                          telemetry=None, staleness=None):
     """Step + shardings bundle for the launcher / dry-run."""
     dcfg = dcfg or DistConfig(num_clients=mesh_num_clients(mesh))
     controller = controller or MadsController(s=model.num_params())
     step = make_afl_train_step(model, cfg, dcfg, controller,
-                               compressor=compressor, telemetry=telemetry)
+                               compressor=compressor, telemetry=telemetry,
+                               staleness=staleness)
     st_sh = state_shardings(model, mesh, dcfg, rules)
     rep = NamedSharding(mesh, P())
     return {

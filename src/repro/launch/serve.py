@@ -25,17 +25,26 @@ from repro.utils import get_logger
 log = get_logger("repro.serve")
 
 
-def serve(cfg, model, params, prompts, gen: int, window: int = 0):
-    """Greedy generation: returns (tokens (B, gen), stats dict)."""
+def serve(cfg, model, params, prompts, gen: int, window: int = 0,
+          frames=None):
+    """Greedy generation: returns (tokens (B, gen), stats dict).
+
+    ``frames``: encoder features for enc-dec (audio) archs, passed through
+    to ``model.prefill`` — callers must NOT monkeypatch the model instance
+    (a wrapped ``prefill`` survives into the next ``serve()`` call and
+    injects stale frames).
+    """
     if window and cfg.family in ("dense", "moe", "vlm"):
         cfg = cfg.replace(sliding_window=window)
     b, plen = prompts.shape
     max_seq = window or (plen + gen)
+    fkw = {} if frames is None else {"frames": frames}
     t0 = time.time()
     if cfg.family == "ssm":
-        last, cache = model.prefill(params, cfg, prompts)
+        last, cache = model.prefill(params, cfg, prompts, **fkw)
     else:
-        last, cache = model.prefill(params, cfg, prompts, max_seq=max_seq)
+        last, cache = model.prefill(params, cfg, prompts, max_seq=max_seq,
+                                    **fkw)
     # async dispatch: block before reading the clock or prefill time
     # under-counts and leaks into the decode measurement
     jax.block_until_ready(last)
@@ -85,14 +94,14 @@ def main() -> None:
     )
     log.info("arch=%s params=%d batch=%d prompt=%d gen=%d",
              cfg.name, model.num_params(), args.batch, args.prompt_len, args.gen)
+    frames = None
     if cfg.family == "audio":
-        # enc-dec needs frames; inject stub features
+        # enc-dec needs frames; pass stub features through serve()
         frames = jnp.asarray(
             rng.normal(0, 0.02, (args.batch, cfg.encoder_seq, cfg.d_model)), jnp.float32
         )
-        model_prefill = model.prefill
-        model.prefill = lambda p, c, t, **kw: model_prefill(p, c, t, frames=frames, **kw)
-    toks, stats = serve(cfg, model, params, prompts, args.gen, args.window)
+    toks, stats = serve(cfg, model, params, prompts, args.gen, args.window,
+                        frames=frames)
     log.info("generated %s tokens; prefill=%.2fs decode=%.2fs (%.1f tok/s)",
              toks.shape, stats["prefill_s"], stats["decode_s"], stats["tok_per_s"])
     print(np.asarray(toks)[:2])

@@ -175,6 +175,13 @@ def main() -> None:
                     help="fixed-kb codec: keep-fraction target")
     ap.add_argument("--fixed-bits", type=int, default=8,
                     help="fixed-kb codec: value bit-width")
+    ap.add_argument("--staleness", default="constant",
+                    choices=("constant", "hinge", "poly"),
+                    help="alpha * s(delta_tau) mixing family "
+                         "(core.afl.StalenessWeight; shared with "
+                         "repro/serve)")
+    ap.add_argument("--staleness-alpha", type=float, default=1.0,
+                    help="mixing weight scale alpha")
     ap.add_argument("--b-range", type=int, nargs=2, default=(2, 16),
                     help="joint/qsgd codecs: value bit-width search range")
     ap.add_argument("--reduced", action="store_true")
@@ -228,6 +235,7 @@ def main() -> None:
         fixed_k_frac=args.fixed_k_frac, fixed_bits=args.fixed_bits,
         compress_b_min=args.b_range[0], compress_b_max=args.b_range[1],
         per_layer_budget=args.per_layer,
+        staleness_family=args.staleness, staleness_alpha=args.staleness_alpha,
         scenario_backend=args.scenario_backend,
     )
     grid = ExperimentGrid(

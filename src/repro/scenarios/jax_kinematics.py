@@ -131,7 +131,22 @@ def _rwp_positions(key, steps: int, dt: float, n: int, area: float,
     xs = jnp.stack([nodes[:, :-1], nodes[:, 1:]], axis=2).reshape(n, 2 * m, 2)
 
     tq = jnp.arange(steps, dtype=jnp.float32) * dt
-    idx = jax.vmap(lambda t: jnp.searchsorted(t, tq, side="right"))(tp)
+    # bucketed lookup on the uniform query grid: a breakpoint at time t is
+    # <= tq[j] exactly for j >= ceil(t/dt), so per-row bucket counts of
+    # ceil(tp/dt) followed by a cumsum reproduce
+    # searchsorted(tp, tq, side="right") in O(m + steps) work per device
+    # instead of the vmapped O(steps log m) binary search (which left
+    # jitted RWP barely ahead of the NumPy oracle).  An off-by-one at a
+    # breakpoint sitting within one ulp of a grid point is positionally
+    # harmless: adjacent segments share the breakpoint node, so both leg
+    # choices interpolate to the same position
+    q0 = jnp.clip(jnp.ceil(tp / dt).astype(jnp.int32), 0, steps)
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    # int16 carries the running count (<= 2m « 32767) at half the cumsum
+    # memory traffic — the scan is bandwidth-bound on CPU
+    cnt = jnp.zeros((n, steps + 1), jnp.int16).at[rows, q0].add(
+        jnp.int16(1))
+    idx = jnp.cumsum(cnt[:, :steps], axis=1).astype(jnp.int32)
     i1 = jnp.clip(idx, 1, 2 * m - 1)
     i0 = i1 - 1
     t0 = jnp.take_along_axis(tp, i0, axis=1)  # (n, steps)

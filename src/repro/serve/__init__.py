@@ -1,0 +1,25 @@
+"""Streaming ingestion path for compressed client uploads.
+
+The simulation engines (``core/afl.py``, ``experiments/scan_engine.py``,
+``core/distributed.py``) aggregate a whole round of uploads as one tensor
+contraction — fine when the scenario engine *generates* the uploads.  A
+deployed MES instead receives them one at a time off the network.  This
+package is that server:
+
+* ``queue``     — ``ArrivalBuffer``: bounded arrival queue with counted
+  backpressure (reject or defer; nothing is ever dropped silently).
+* ``aggregate`` — ``make_fused_ingest``: decompress + staleness-weighted
+  aggregation over a padded batch of wire payloads as ONE jitted op,
+  bit-identical to ``afl_round``'s aggregation (tests/test_serve.py).
+* ``server``    — ``IngestServer``: buffer + fused op + serve telemetry
+  registry + optional mesh sharding, with a one-fetch snapshot.
+
+Wire format: ``repro.compression.wire``.  Staleness family:
+``repro.core.afl.StalenessWeight`` (shared with the engines via
+``Policy``).  See README.md here for the contracts.
+"""
+from repro.serve.aggregate import make_fused_ingest
+from repro.serve.queue import ArrivalBuffer
+from repro.serve.server import IngestServer
+
+__all__ = ["ArrivalBuffer", "IngestServer", "make_fused_ingest"]

@@ -1,0 +1,107 @@
+"""Fused batched decompress + staleness-weighted aggregation.
+
+One jitted program takes a padded batch of wire payloads and applies them
+to the global model: dequantise the codes (``wire.decode_values``),
+scatter the sparse coordinates into a dense per-upload block, and mix
+with the FedAsync ``alpha * s(delta_tau)`` weights
+(``core.afl.StalenessWeight`` — the SAME object the engines carry on
+``Policy``, so server and simulator share the rule by construction).
+
+Two aggregation kernels, chosen at build time:
+
+* ``mode="parity"`` (default) — scatter to a dense ``(B, s)`` block, then
+  apply per-leaf exactly ``afl_round``'s expression
+  ``w - (tensordot(mix, up, axes=(0,0)) / N).astype(w.dtype)``.  Same
+  values, same contraction shape per leaf → the SAME reduction XLA lowers
+  for the engines, which is what makes a batch of B uploads bit-identical
+  to one ``afl_round`` over those B devices (tests/test_serve.py, all
+  four codecs).
+* ``mode="scatter"`` — weight the decoded values per row and scatter-add
+  straight into one ``(s,)`` accumulator, skipping the ``(B, s)`` dense
+  intermediate.  O(B·K) work instead of O(B·s); the result is equal up
+  to float summation order (same exact answer whenever no two uploads in
+  the batch ship the same coordinate).
+
+Telemetry rides inside the op: pass a ``serve_registry()`` and its state
+is updated per batch with zero extra host round-trips.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.afl import StalenessWeight
+from repro.telemetry.metrics import MetricRegistry, record_ingest
+
+__all__ = ["make_fused_ingest"]
+
+_MODES = ("parity", "scatter")
+
+
+def make_fused_ingest(w_template, *, batch: int, max_k: int,
+                      num_devices: int,
+                      staleness: StalenessWeight = StalenessWeight(),
+                      registry: Optional[MetricRegistry] = None,
+                      mode: str = "parity"):
+    """Build the jitted ingest step for a fixed model/batch geometry.
+
+    ``w_template`` fixes the pytree structure and leaf shapes of the
+    global weights (the padded flat size ``s`` and the per-leaf slicing
+    are compile-time constants).  ``num_devices`` is the paper's ``N`` —
+    the MES averages over the population, not over the batch.
+
+    Returns ``ingest(w, packed, tstate) -> (w_new, tstate')`` where
+    ``packed`` is a ``wire.pack_batch`` dict and ``tstate`` the registry
+    state (pass ``{}`` when ``registry`` is None).
+    """
+    if mode not in _MODES:
+        raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
+    leaves, treedef = jax.tree.flatten(w_template)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(jnp.size(l)) for l in leaves]
+    offsets = [sum(sizes[:i]) for i in range(len(sizes))]
+    s = sum(sizes)
+    from repro.compression.wire import decode_values  # avoid import cycle
+
+    def ingest(w, packed, tstate):
+        coords = jnp.asarray(packed["coords"], jnp.int32)
+        vals = decode_values(packed["codes"], packed["step"], packed["b"])
+        mask = jnp.asarray(packed["mask"], jnp.float32)
+        dtau = jnp.asarray(packed["dtau"], jnp.float32)
+        # the engines' mixing rule, verbatim (afl_round): identity family
+        # drops the multiply at trace time
+        mix = mask if staleness.is_identity \
+            else mask * staleness.weight(dtau)
+        w_leaves = jax.tree.leaves(w)
+        if mode == "parity":
+            rows = jnp.arange(batch, dtype=jnp.int32)[:, None]
+            dense = jnp.zeros((batch, s), jnp.float32)
+            dense = dense.at[rows, coords].add(vals, mode="drop")
+            new = []
+            for leaf, off, size, shape in zip(w_leaves, offsets, sizes,
+                                              shapes):
+                up = dense[:, off:off + size].reshape((batch,) + shape)
+                new.append(leaf - (
+                    jnp.tensordot(mix, up.astype(jnp.float32), axes=(0, 0))
+                    / num_devices
+                ).astype(leaf.dtype))
+        else:
+            wvals = vals * mix[:, None]
+            acc = jnp.zeros((s,), jnp.float32)
+            acc = acc.at[coords.reshape(-1)].add(wvals.reshape(-1),
+                                                 mode="drop")
+            new = []
+            for leaf, off, size, shape in zip(w_leaves, offsets, sizes,
+                                              shapes):
+                up = acc[off:off + size].reshape(shape)
+                new.append(leaf - (up / num_devices).astype(leaf.dtype))
+        w_new = jax.tree.unflatten(treedef, new)
+        if registry is not None:
+            tstate = record_ingest(
+                registry, tstate, mask=mask, dtau=dtau,
+                bits=jnp.asarray(packed["bits"], jnp.float32), weights=mix)
+        return w_new, tstate
+
+    return jax.jit(ingest)

@@ -1,0 +1,118 @@
+"""``IngestServer`` — the streaming MES: arrival buffer + fused ingest.
+
+Composes the pieces into the serving loop a deployed aggregator runs:
+clients ``submit`` wire payloads (bounded queue, counted backpressure),
+``step`` drains up to one batch through the fused decompress+aggregate
+op, and ``snapshot`` folds the host-side queue accounting into the
+device-resident serve registry state for the run's ONE telemetry fetch.
+
+Mesh-aware: pass a ``Mesh`` (e.g. from ``launch.mesh.make_client_mesh``)
+and every packed batch is placed with ``core.distributed.ingest_shardings``
+— the batch axis shards over ``data``, the global model replicates, and
+GSPMD lowers the weighted client contraction to the same hierarchical
+all-reduce as the distributed train step.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression.wire import WirePayload, pack_batch
+from repro.core.afl import StalenessWeight
+from repro.serve.aggregate import make_fused_ingest
+from repro.serve.queue import ArrivalBuffer
+from repro.telemetry.metrics import MetricRegistry, serve_registry
+from repro.telemetry.tracing import PhaseTracer
+
+__all__ = ["IngestServer"]
+
+
+class IngestServer:
+    """Bounded-queue ingestion front-end over the fused aggregation op."""
+
+    def __init__(self, w, *, num_devices: int, batch: int, max_k: int,
+                 staleness: StalenessWeight = StalenessWeight(),
+                 queue_capacity: Optional[int] = None,
+                 queue_policy: str = "reject",
+                 registry: Optional[MetricRegistry] = None,
+                 tracer: Optional[PhaseTracer] = None,
+                 mesh=None, mode: str = "parity"):
+        self.batch = int(batch)
+        self.max_k = int(max_k)
+        self.num_devices = int(num_devices)
+        self.staleness = staleness
+        self.s = sum(int(jnp.size(l)) for l in jax.tree.leaves(w))
+        self.registry = serve_registry() if registry is None else registry
+        self.tracer = tracer or PhaseTracer()
+        self.buffer = ArrivalBuffer(
+            capacity=queue_capacity if queue_capacity is not None
+            else 4 * self.batch,
+            policy=queue_policy)
+        self.mesh = mesh
+        self._shardings = None
+        if mesh is not None:
+            from repro.core.distributed import ingest_shardings
+            if self.batch % mesh.devices.size:
+                raise ValueError(
+                    f"batch={self.batch} not divisible by mesh size "
+                    f"{mesh.devices.size}")
+            self._shardings = ingest_shardings(mesh)
+            w = jax.device_put(w, self._shardings["w"])
+        self.w = w
+        self.tstate = self.registry.init_state()
+        self.rnd = 0  # server-side model version counter
+        self._ingest = make_fused_ingest(
+            w, batch=self.batch, max_k=self.max_k,
+            num_devices=self.num_devices, staleness=staleness,
+            registry=self.registry, mode=mode)
+
+    # -- producer ------------------------------------------------------------
+
+    def submit(self, payload: WirePayload) -> bool:
+        """Offer one upload; ``False`` means backpressure (counted)."""
+        return self.buffer.offer(payload)
+
+    # -- consumer ------------------------------------------------------------
+
+    def step(self) -> int:
+        """Drain up to one batch through the fused op; returns the number
+        of uploads aggregated (0 leaves all state untouched — an empty
+        batch must not advance the model version)."""
+        items = self.buffer.take(self.batch)
+        if not items:
+            return 0
+        with self.tracer.span("serve.pack", n=len(items)):
+            packed = pack_batch(items, s=self.s, max_k=self.max_k,
+                                batch=self.batch, server_round=self.rnd)
+            if self._shardings is not None:
+                packed = {k: jax.device_put(v, self._shardings["batch"])
+                          for k, v in packed.items()}
+        with self.tracer.span("serve.ingest", n=len(items)) as tr:
+            self.w, self.tstate = self._ingest(self.w, packed, self.tstate)
+            tr.fence(self.w)
+        self.rnd += 1
+        return len(items)
+
+    def drain(self) -> int:
+        """Step until the buffer is empty; returns uploads aggregated."""
+        total = 0
+        while len(self.buffer):
+            total += self.step()
+        return total
+
+    # -- accounting ----------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Queue counters + device registry state -> one host fetch."""
+        self.buffer.check_invariant()
+        c = self.buffer.counters()
+        st = self.registry.update(
+            self.tstate,
+            counters={k: float(c[k]) for k in
+                      ("received", "accepted", "rejected", "deferred")},
+            gauges={"queue_depth": float(c["depth"]),
+                    "queue_peak": float(c["peak"])},
+        )
+        return self.registry.fetch(st)

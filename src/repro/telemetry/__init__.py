@@ -32,6 +32,7 @@ from repro.telemetry.export import (
 from repro.telemetry.metrics import (
     AFL_REGISTRY,
     HIST_KEYS,
+    SERVE_REGISTRY,
     Counter,
     Gauge,
     Histogram,
@@ -41,7 +42,9 @@ from repro.telemetry.metrics import (
     jit_record,
     merge_fetched,
     record_het,
+    record_ingest,
     record_round,
+    serve_registry,
     to_jsonable,
 )
 from repro.telemetry.perdevice import (
@@ -63,6 +66,7 @@ from repro.telemetry.tracing import PhaseTracer, Span
 __all__ = [
     "AFL_REGISTRY",
     "HIST_KEYS",
+    "SERVE_REGISTRY",
     "Counter",
     "DeviceTable",
     "Gauge",
@@ -85,7 +89,9 @@ __all__ = [
     "probes_to_jsonable",
     "read_jsonl",
     "record_het",
+    "record_ingest",
     "record_round",
+    "serve_registry",
     "render_report",
     "report_from_config",
     "sanitize",

@@ -454,6 +454,79 @@ def record_round(registry, state: dict, metrics: dict, tau) -> dict:
     )
 
 
+# ---------------------------------------------------------------------------
+# The streaming-ingest (serve-path) registry
+# ---------------------------------------------------------------------------
+
+_FILL_EDGES = (0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0)
+
+
+def serve_registry() -> MetricRegistry:
+    """Registry for the streaming aggregation server (``repro/serve``).
+
+    Device-side counters (``batches`` / ``ingested`` / ``bits_ingested`` /
+    ``weight_sum`` and the histograms) accumulate inside the fused ingest
+    op; the arrival-queue counters (``received`` / ``accepted`` /
+    ``rejected`` / ``deferred``) and queue gauges live host-side in the
+    :class:`repro.serve.queue.ArrivalBuffer` and are folded in when the
+    server snapshots — one state, one fetch, same algebra as the engines.
+    """
+    return MetricRegistry(
+        counters=(
+            Counter("batches", "fused ingest batches executed"),
+            Counter("ingested", "uploads aggregated into the global model"),
+            Counter("bits_ingested", "wire bits decoded and aggregated"),
+            Counter("weight_sum", "sum of alpha*s(delta_tau) mix weights"),
+            Counter("received", "uploads offered to the arrival buffer"),
+            Counter("accepted", "uploads admitted to the arrival buffer"),
+            Counter("rejected", "uploads refused by backpressure (reject)"),
+            Counter("deferred", "uploads pushed back by backpressure (defer)"),
+        ),
+        gauges=(
+            Gauge("server_round", "aggregation rounds applied"),
+            Gauge("queue_depth", "arrival-buffer depth at snapshot"),
+            Gauge("queue_peak", "peak arrival-buffer depth"),
+        ),
+        histograms=(
+            Histogram("staleness", _STALENESS_EDGES,
+                      "delta_tau of ingested uploads"),
+            Histogram("batch_fill", _FILL_EDGES,
+                      "occupied fraction of each fused batch"),
+            Histogram("bits", _BITS_EDGES,
+                      "wire bits per ingested upload"),
+        ),
+    )
+
+
+#: Shared default instance (same one-compile-cache-entry rationale as
+#: :data:`AFL_REGISTRY`).
+SERVE_REGISTRY = serve_registry()
+
+
+def record_ingest(registry: MetricRegistry, state: dict, *, mask, dtau,
+                  bits, weights) -> dict:
+    """Fold one fused ingest batch into the serve registry state
+    (jnp-traceable — called inside the jitted ingest op).  ``mask`` is the
+    (B,) slot-occupancy/feasibility mask, ``weights`` the realized
+    ``mask * alpha * s(dtau)`` mixing weights."""
+    mask = jnp.asarray(mask, jnp.float32)
+    return registry.update(
+        state,
+        counters={
+            "batches": 1.0,
+            "ingested": jnp.sum(mask),
+            "bits_ingested": jnp.sum(jnp.asarray(bits, jnp.float32) * mask),
+            "weight_sum": jnp.sum(jnp.asarray(weights, jnp.float32)),
+        },
+        gauges={"server_round": state["gauges"]["server_round"] + 1.0},
+        hists={
+            "staleness": (dtau, mask),
+            "batch_fill": (jnp.mean(mask)[None], jnp.ones((1,), jnp.float32)),
+            "bits": (bits, mask),
+        },
+    )
+
+
 def record_het(telemetry, state: dict, het) -> dict:
     """Fold one round's heterogeneity loss masks into a telemetry state.
 

@@ -1,0 +1,344 @@
+"""Streaming ingestion server (repro/serve): backpressure accounting,
+wire-format exactness, the staleness-weight family, and the acceptance
+parity — the fused batched decompress+aggregate producing *bit-identical*
+global weights to sequentially applying the same uploads through
+``afl_round``, for all four compression codecs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compression.wire import (decode_values, encode_upload,
+                                    index_bits, pack_batch)
+from repro.configs import FLConfig, get_config
+from repro.core import baselines as BL
+from repro.core.afl import StalenessWeight, afl_init, afl_round
+from repro.core.runner import build_provider, sample_budgets
+from repro.experiments import DataShard
+from repro.launch.train import build_device_data
+from repro.models.registry import build_model
+from repro.serve import ArrivalBuffer, IngestServer, make_fused_ingest
+from repro.telemetry import serve_registry
+
+CODEC_POLICIES = ("mads-topk", "mads-joint", "qsgd", "fixed-kb")
+ROUNDS = 4
+
+
+# ---------------------------------------------------------------------------
+# Arrival buffer: backpressure invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["reject", "defer"])
+def test_backpressure_never_drops_silently(policy):
+    """Every offered upload lands in exactly one counter: the accounting
+    identity received == accepted + rejected + deferred holds through an
+    overload, and every failed offer returns False."""
+    buf = ArrivalBuffer(capacity=3, policy=policy)
+    outcomes = [buf.offer(i) for i in range(10)]
+    assert outcomes == [True] * 3 + [False] * 7
+    c = buf.counters()
+    assert c["received"] == 10 and c["accepted"] == 3
+    assert c["deferred" if policy == "defer" else "rejected"] == 7
+    assert c["rejected"] + c["deferred"] == 7
+    assert c["received"] == c["accepted"] + c["rejected"] + c["deferred"]
+    buf.check_invariant()
+    # draining restores capacity; accounting still closes
+    assert buf.take(2) == [0, 1]
+    assert buf.offer(10) is True
+    buf.check_invariant()
+    c = buf.counters()
+    assert c["accepted"] == c["taken"] + c["depth"]
+
+
+def test_buffer_validates_construction():
+    with pytest.raises(ValueError):
+        ArrivalBuffer(capacity=0)
+    with pytest.raises(ValueError):
+        ArrivalBuffer(capacity=4, policy="drop")
+
+
+def test_server_counts_backpressure_in_registry():
+    """Rejected/deferred uploads surface in the telemetry snapshot — the
+    'never silent' contract end to end."""
+    w = {"a": jnp.zeros((16,), jnp.float32)}
+    srv = IngestServer(w, num_devices=4, batch=2, max_k=4,
+                       queue_capacity=2, queue_policy="reject")
+    ups = [encode_upload({"a": np.eye(16, dtype=np.float32)[i]}, device=i)
+           for i in range(5)]
+    admitted = [srv.submit(p) for p in ups]
+    assert admitted == [True, True, False, False, False]
+    srv.drain()
+    snap = srv.snapshot()
+    assert snap["counters"]["received"] == 5
+    assert snap["counters"]["accepted"] == 2
+    assert snap["counters"]["rejected"] == 3
+    assert snap["counters"]["ingested"] == 2
+    assert snap["gauges"]["queue_peak"] == 2
+    assert snap["gauges"]["queue_depth"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Wire format: round-trip exactness
+# ---------------------------------------------------------------------------
+
+
+def test_wire_grid_codes_roundtrip_bitwise():
+    """b < 32: integer grid codes decode as codes * step — the codecs'
+    exact float multiply, so the dense payload reproduces bitwise."""
+    rng = np.random.default_rng(0)
+    step = 7.3e-4
+    q = rng.integers(-(2 ** 14), 2 ** 14, size=50).astype(np.int32)
+    dense = np.zeros(512, np.float32)
+    idx = np.sort(rng.choice(512, 50, replace=False))
+    dense[idx] = q.astype(np.float32) * np.float32(step)
+    p = encode_upload({"x": dense}, b=15, step=step)
+    assert p.k == int(np.count_nonzero(dense))
+    packed = pack_batch([p], s=512, max_k=64, batch=1)
+    vals = decode_values(packed["codes"], packed["step"], packed["b"])
+    out = np.zeros(512, np.float32)
+    out[packed["coords"][0][: p.k]] = np.asarray(vals)[0][: p.k]
+    np.testing.assert_array_equal(out.view(np.int32), dense.view(np.int32))
+
+
+def test_wire_raw_f32_roundtrip_bitwise():
+    """b == 32: raw bit patterns survive the int32 bitcast exactly
+    (including denormals and negative zero)."""
+    dense = np.zeros(64, np.float32)
+    dense[[1, 7, 33]] = [1e-40, -0.0, 3.14159]
+    dense[5] = np.float32(1.1)
+    p = encode_upload(dense, b=32)
+    assert p.k == 3  # -0.0 is not a nonzero coordinate
+    packed = pack_batch([p], s=64, max_k=8, batch=1)
+    vals = np.asarray(decode_values(packed["codes"], packed["step"],
+                                    packed["b"]))
+    out = np.zeros(64, np.float32)
+    out[packed["coords"][0][: p.k]] = vals[0][: p.k]
+    expect = dense.copy()
+    expect[7] = 0.0  # -0.0 compares equal to zero -> never shipped
+    np.testing.assert_array_equal(out.view(np.int32), expect.view(np.int32))
+
+
+def test_wire_padding_is_dropped_and_limits_enforced():
+    dense = np.zeros(32, np.float32)
+    dense[:6] = 1.0
+    with pytest.raises(ValueError):
+        encode_upload(dense, max_k=4)
+    p = encode_upload(dense, max_k=8)
+    packed = pack_batch([p], s=32, max_k=8, batch=2, server_round=5)
+    assert (packed["coords"][0][6:] == 32).all()  # pad coord = s
+    assert packed["mask"].tolist() == [1.0, 0.0]
+    with pytest.raises(ValueError):
+        pack_batch([p, p, p], s=32, max_k=8, batch=2)
+    assert p.bits == 6 * (32 + index_bits(32))
+
+
+# ---------------------------------------------------------------------------
+# Staleness family: monotonicity + degenerate equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_staleness_monotone_and_bounded():
+    dtau = jnp.arange(0.0, 65.0)
+    for sw in (StalenessWeight(family="hinge", hinge_a=2.0, hinge_b=4.0),
+               StalenessWeight(family="poly", poly_a=0.5)):
+        s = np.asarray(sw.s(dtau))
+        assert s[0] == 1.0
+        assert np.all(np.diff(s) <= 0), sw  # non-increasing
+        assert np.all((s > 0) & (s <= 1.0)), sw
+    # hinge is exactly 1 inside the grace window, 1/(a (dtau-b)) beyond
+    hw = StalenessWeight(family="hinge", hinge_a=2.0, hinge_b=4.0)
+    assert np.asarray(hw.s(jnp.asarray([0.0, 4.0]))).tolist() == [1.0, 1.0]
+    np.testing.assert_allclose(float(hw.s(9.0)), 1.0 / (2.0 * 5.0))
+
+
+def test_staleness_degenerate_settings_equal_constant():
+    """hinge with the grace window past every observed dtau, and poly at
+    a = 0, both collapse to the constant family at the same alpha."""
+    dtau = jnp.arange(0.0, 33.0)
+    const = StalenessWeight(family="constant", alpha=0.25)
+    hinge = StalenessWeight(family="hinge", alpha=0.25, hinge_b=64.0)
+    poly = StalenessWeight(family="poly", alpha=0.25, poly_a=0.0)
+    np.testing.assert_array_equal(np.asarray(const.weight(dtau)),
+                                  np.asarray(hinge.weight(dtau)))
+    np.testing.assert_array_equal(np.asarray(const.weight(dtau)),
+                                  np.asarray(poly.weight(dtau)))
+    assert not const.is_identity  # alpha != 1 still scales
+    assert StalenessWeight().is_identity
+
+
+def test_staleness_validates_family():
+    with pytest.raises(ValueError):
+        StalenessWeight(family="exp").s(1.0)
+
+
+def test_fused_ingest_applies_staleness_weights():
+    """weight_sum in the serve registry equals sum(alpha * s(dtau)) over
+    the ingested uploads, and the aggregated model reflects the
+    discount."""
+    s = 32
+    w = {"a": jnp.zeros((s,), jnp.float32)}
+    sw = StalenessWeight(family="poly", alpha=0.5, poly_a=1.0)
+    dense = np.zeros(s, np.float32)
+    dense[3] = 4.0
+    ups = [encode_upload({"a": dense}, device=i, rnd=-i) for i in range(3)]
+    srv = IngestServer(w, num_devices=1, batch=4, max_k=4, staleness=sw)
+    for p in ups:
+        srv.submit(p)
+    srv.step()
+    snap = srv.snapshot()
+    expect_w = 0.5 * np.asarray([1.0, 1.0 / 2.0, 1.0 / 3.0])
+    np.testing.assert_allclose(snap["counters"]["weight_sum"],
+                               expect_w.sum(), rtol=1e-6)
+    np.testing.assert_allclose(float(srv.w["a"][3]),
+                               -4.0 * expect_w.sum(), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: fused batched ingest bit-identical to sequential afl_round
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def federation():
+    cfg = get_config("resnet9-cifar10").replace(d_model=4)
+    model = build_model(cfg)
+    fl = FLConfig(
+        num_devices=4, rounds=ROUNDS, batch_size=8, learning_rate=0.02,
+        mean_contact=6.0, mean_intercontact=30.0, energy_budget=(40.0, 80.0),
+    )
+    dev, ev = build_device_data(cfg, fl, train_n=160, eval_n=64, seed=0)
+    shard = DataShard(dev, fl.batch_size, seed=0)
+    return cfg, model, fl, shard
+
+
+def _reference_rounds(federation, policy_name):
+    """Drive afl_round with exposed uploads; returns (w0, w_final, rounds)
+    where rounds is a list of per-round (uploads, okf, b, step) pulled to
+    the host."""
+    cfg, model, fl, shard = federation
+    policy = dataclasses.replace(
+        BL.ALL[policy_name](model.num_params(), fl), expose_uploads=True)
+    provider = build_provider(fl, policy_name, None, ROUNDS, 0)
+    budgets = sample_budgets(fl, 0)
+    state = afl_init(model, cfg, fl, jax.random.key(0))
+    w0 = jax.tree.map(lambda l: np.asarray(l), state.w)
+    key = shard.seed_key(0)
+    rounds = []
+    for r in range(ROUNDS):
+        batch = shard.traced_batch(key, r)
+        z, t, h2 = provider.round(r)
+        state, m = afl_round(
+            state, batch, jnp.asarray(z, jnp.float32),
+            jnp.asarray(t, jnp.float32), jnp.asarray(h2, jnp.float32),
+            budgets, model=model, cfg=cfg, fl=fl, policy=policy)
+        rounds.append({
+            "upload": jax.tree.map(lambda l: np.asarray(l), m["upload"]),
+            "okf": np.asarray(m["uploads"]),
+            "b": np.asarray(m["b"], np.float64),
+            "step": np.asarray(m["upload_step"], np.float64),
+        })
+    w_final = jax.tree.map(lambda l: np.asarray(l), state.w)
+    return w0, w_final, rounds
+
+
+@pytest.mark.parametrize("policy_name", CODEC_POLICIES)
+def test_fused_ingest_bitwise_matches_afl_round(federation, policy_name):
+    """The tentpole acceptance: encode every round's uploads to the wire,
+    push them through the bounded queue + fused batched
+    decompress+aggregate, and land EXACTLY the weights afl_round produced
+    — per round and at the end, bit for bit."""
+    cfg, model, fl, shard = federation
+    n = fl.num_devices
+    w0, w_ref, rounds = _reference_rounds(federation, policy_name)
+    s = sum(l.size for l in jax.tree.leaves(w0))
+    srv = IngestServer(
+        jax.tree.map(jnp.asarray, w0), num_devices=n, batch=n, max_k=s,
+        queue_capacity=n)
+    shipped = 0.0
+    for r, rec in enumerate(rounds):
+        for i in range(n):
+            # quantised codecs ship grid codes at the codec's (step, b);
+            # b = 0 (withheld) and b = 32 rows ride the raw-f32 path
+            b_i = rec["b"][i] if rec["b"][i] > 0 else 32.0
+            p = encode_upload(
+                jax.tree.map(lambda l: l[i], rec["upload"]),
+                b=b_i, step=float(rec["step"][i]), device=i,
+                ok=float(rec["okf"][i]))
+            assert srv.submit(p)
+            shipped += p.k * rec["okf"][i]
+        assert srv.step() == n
+        # intermediate parity: server weights == afl_round weights at r
+    for a, b in zip(jax.tree.leaves(srv.w), jax.tree.leaves(w_ref)):
+        np.testing.assert_array_equal(np.asarray(a), b,
+                                      err_msg=policy_name)
+    assert shipped > 0  # parity is not vacuous
+    snap = srv.snapshot()
+    assert snap["counters"]["ingested"] == np.sum(
+        [rec["okf"].sum() for rec in rounds])
+    srv.buffer.check_invariant()
+
+
+def test_scatter_mode_matches_parity_mode():
+    """The O(B*K) scatter kernel agrees with the parity kernel to float
+    tolerance (bitwise whenever no two uploads share a coordinate)."""
+    rng = np.random.default_rng(3)
+    s, B, K = 256, 8, 16
+    w = {"a": jnp.asarray(rng.standard_normal(s // 2), jnp.float32),
+         "b": jnp.asarray(rng.standard_normal(s // 2), jnp.float32)}
+    ups = []
+    for i in range(B):
+        dense = np.zeros(s, np.float32)
+        dense[rng.choice(s, K, replace=False)] = \
+            rng.standard_normal(K).astype(np.float32)
+        ups.append(encode_upload({"a": dense[: s // 2],
+                                  "b": dense[s // 2:]},
+                                 device=i, rnd=-i))
+    sw = StalenessWeight(family="hinge", alpha=0.7)
+    packed = pack_batch(ups, s=s, max_k=K, batch=B)
+    reg = serve_registry()
+    outs = {}
+    for mode in ("parity", "scatter"):
+        ingest = make_fused_ingest(w, batch=B, max_k=K, num_devices=B,
+                                   staleness=sw, registry=reg, mode=mode)
+        outs[mode], tstate = ingest(w, packed, reg.init_state())
+        assert float(tstate["counters"]["ingested"]) == B
+    for a, b in zip(jax.tree.leaves(outs["parity"]),
+                    jax.tree.leaves(outs["scatter"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_empty_step_is_identity():
+    w = {"a": jnp.ones((8,), jnp.float32)}
+    srv = IngestServer(w, num_devices=2, batch=2, max_k=2)
+    assert srv.step() == 0 and srv.rnd == 0
+    np.testing.assert_array_equal(np.asarray(srv.w["a"]), np.ones(8))
+
+
+# ---------------------------------------------------------------------------
+# launch/serve.py regression: no model monkeypatching for audio frames
+# ---------------------------------------------------------------------------
+
+
+def test_serve_frames_passthrough_does_not_mutate_model():
+    """Audio (enc-dec) serving passes frames through serve() — the model
+    instance keeps its original prefill, and two serve() calls on the
+    same model behave identically (the monkeypatch double-wrapped)."""
+    from repro.launch.serve import serve
+
+    cfg = get_config("whisper-large-v3").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)), jnp.int32)
+    frames = jnp.asarray(
+        rng.normal(0, 0.02, (1, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    prefill_before = model.prefill
+    toks1, _ = serve(cfg, model, params, prompts, gen=2, frames=frames)
+    assert model.prefill is prefill_before  # instance not mutated
+    toks2, _ = serve(cfg, model, params, prompts, gen=2, frames=frames)
+    np.testing.assert_array_equal(np.asarray(toks1), np.asarray(toks2))
